@@ -1,0 +1,50 @@
+"""Paper Section C: analytic cost comparison MuonBP vs Dion.
+
+Memory / compute / communication per iteration for a representative 8B
+matrix (4096 x 14336, 8-way TP), reproducing the paper's asymptotics:
+
+  Dion:    state O(mn + nr); compute O(mnr + mr^2 + r^3); comm O((m+n) r)
+  MuonBP:  state O(mn);      compute (P-1)/P block + 1/P full NS;
+           comm O(mn / P)    (m/P or n/P play the role of Dion's rank r)
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+
+M, N = 4096, 14336      # 8B MLP up-projection
+TP = 8
+P = 5                   # MuonBP period
+R = 256                 # Dion rank (paper's low-rank setting)
+NS_STEPS = 5
+BYTES = 4
+
+
+def ns_flops(m, n, steps=NS_STEPS):
+    m, n = min(m, n), max(m, n)
+    return steps * 2 * (2 * n * m * m + m**3)
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    # --- persistent optimizer state ---------------------------------------
+    dion_state = (M * N + N * R) * BYTES
+    muonbp_state = M * N * BYTES
+    rows.append(row("dion_cost_state_bytes", 0.0, f"dion={dion_state};muonbp={muonbp_state}"))
+
+    # --- compute per iteration --------------------------------------------
+    dion_compute = 2 * M * N * R + 2 * M * R * R + R**3 + M * N
+    muonbp_block = ns_flops(M, N // TP) / TP * TP          # all blocks in parallel; per-device 1 block
+    muonbp_compute = (P - 1) / P * ns_flops(M, N // TP) + (1 / P) * ns_flops(M, N)
+    rows.append(row("dion_cost_flops", 0.0,
+                    f"dion={dion_compute:.3g};muonbp_avg={muonbp_compute:.3g};muonbp_block_only={muonbp_block:.3g}"))
+
+    # --- model-parallel communication per iteration ------------------------
+    dion_comm = (M + N) * R * BYTES + R * R * BYTES
+    muonbp_comm = M * N * BYTES / P                        # gather/scatter every P steps
+    muon_comm = M * N * BYTES                              # baseline Muon every step
+    rows.append(row("dion_cost_comm_bytes", 0.0,
+                    f"dion={dion_comm};muonbp_avg={muonbp_comm:.0f};muon={muon_comm}"))
+    rows.append(row("dion_cost_comm_reduction_vs_muon", 0.0,
+                    f"muonbp=x{muon_comm/muonbp_comm:.1f}(=P);dion=x{muon_comm/dion_comm:.1f}"))
+    return rows

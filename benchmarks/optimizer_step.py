@@ -1,0 +1,51 @@
+"""Optimizer-step microbenchmark (paper Sec 2.2 'Computational costs').
+
+Times a full optimizer update over a realistic param set for AdamW / Muon /
+BlockMuon / MuonBP / Dion, plus the Pallas NS kernel (interpret mode on CPU
+— correctness path; the jnp timing is the meaningful CPU number)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.configs import get_config
+from repro.core import adamw, block_muon, combine, dion, label_tree, muon, muon_full
+from repro.core.blocking import BlockSpec2D
+from repro.models.model import init_params
+
+
+def run(quick: bool = False) -> list[str]:
+    cfg = get_config("muonbp-960m").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    labels = label_tree(params)
+    blocks = jax.tree.map(
+        lambda p: BlockSpec2D(1, 4 if p.ndim >= 2 and p.shape[-1] % 4 == 0 else 1)
+        if p.ndim >= 2 else None,
+        params,
+    )
+
+    rows = []
+    n_params = sum(int(p.size) for p in jax.tree.leaves(params))
+    for name, matrix_opt, phase in [
+        ("adamw", None, "block"),
+        ("muon_full", muon_full(1e-3), "full"),
+        ("blockmuon", block_muon(1e-3, block_specs=blocks), "block"),
+        ("muonbp_block_phase", muon(1e-3, block_specs=blocks), "block"),
+        ("dion_r32", dion(1e-3, rank=32), "block"),
+    ]:
+        if matrix_opt is None:
+            opt = combine({"adamw": adamw(1e-3)}, jax.tree.map(lambda _: "adamw", labels))
+        else:
+            opt = combine({"muon": matrix_opt, "adamw": adamw(1e-3)}, labels)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(g, s, p):
+            return opt.update(g, s, p, phase)
+
+        us = timeit(step, grads, state, params, warmup=1, iters=3)
+        rows.append(row(f"opt_step_{name}", us, f"{n_params/1e6:.1f}M_params"))
+    return rows

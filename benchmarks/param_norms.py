@@ -1,0 +1,74 @@
+"""Paper Figure 2/8 + Table 6 analogue: parameter-norm growth.
+
+The paper's key instability diagnosis: BlockMuon's parameter norms grow far
+larger than Muon/MuonBP over training (Table 6: 5702 vs ~2650 at 960M),
+which predicts its blow-up at large learning rates. We track the same
+statistic on the CPU-scale model.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.configs import get_config
+from repro.core import adamw, block_muon, combine, label_tree, muon, muon_full
+from repro.core.blocking import BlockSpec2D
+from repro.core.muon import phase_for_step
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import init_params
+from repro.models.transformer import ShardCtx
+from repro.training.train_step import init_train_state, make_train_step_fns
+
+
+def param_norm(params) -> float:
+    return float(
+        jnp.sqrt(sum(jnp.sum(jnp.square(p.astype(jnp.float32))) for p in jax.tree.leaves(params)))
+    )
+
+
+def run(quick: bool = False, steps: int = 80, lr: float = 0.05) -> list[str]:
+    if quick:
+        steps = 25
+    cfg = get_config("muonbp-960m").reduced()
+    blocks = None
+    rows = []
+    results = {}
+    for name in ("muon", "blockmuon", "muonbp"):
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        if blocks is None:
+            blocks = jax.tree.map(
+                lambda p: BlockSpec2D(1, 4 if p.ndim >= 2 and p.shape[-1] % 4 == 0 else 1)
+                if p.ndim >= 2 else None,
+                params,
+            )
+        labels = label_tree(params)
+        matrix_opt = {
+            "muon": lambda: muon_full(lr),
+            "blockmuon": lambda: block_muon(lr, block_specs=blocks),
+            "muonbp": lambda: muon(lr, lr, period=5, block_specs=blocks),
+        }[name]()
+        opt = combine({"muon": matrix_opt, "adamw": adamw(lr / 2)}, labels)
+        period = {"muon": 1, "blockmuon": None, "muonbp": 5}[name]
+        state = init_train_state(params, opt)
+        fns = make_train_step_fns(cfg, opt, ShardCtx(), donate=False)
+        pipe = iter(SyntheticLM(cfg, 8, 64, seed=0))
+        t0 = time.time()
+        for t in range(steps):
+            b = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+            state, _ = fns[phase_for_step(t, period)](state, b)
+        norm = param_norm(state.params)
+        results[name] = norm
+        us = (time.time() - t0) / steps * 1e6
+        rows.append(row(f"param_norm_{name}_{steps}steps", us, f"norm={norm:.1f}"))
+    rows.append(
+        row(
+            "param_norm_blockmuon_largest", 0.0,
+            f"{results['blockmuon'] >= results['muonbp'] - 1.0}"
+            f"(block={results['blockmuon']:.1f};muonbp={results['muonbp']:.1f};muon={results['muon']:.1f})",
+        )
+    )
+    return rows

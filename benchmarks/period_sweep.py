@@ -1,0 +1,59 @@
+"""Paper Figure 1 analogue: validation loss vs orthogonalization period P,
+for two blocking degrees (the paper's TP-degree axis)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.configs import get_config
+from repro.core import adamw, combine, label_tree, muon
+from repro.core.blocking import BlockSpec2D
+from repro.core.muon import phase_for_step
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import init_params, loss_fn
+from repro.models.transformer import ShardCtx
+from repro.training.train_step import init_train_state, make_train_step_fns
+
+
+def _blocks(params, c):
+    return jax.tree.map(
+        lambda p: BlockSpec2D(1, c if p.ndim >= 2 and p.shape[-1] % c == 0 else 1)
+        if p.ndim >= 2
+        else None,
+        params,
+    )
+
+
+def run(quick: bool = False, steps: int = 80) -> list[str]:
+    if quick:
+        steps = 25
+    cfg = get_config("muonbp-960m").reduced()
+    rows = []
+    for degree in (2, 8):
+        for period in (1, 2, 5, 10, None):
+            params = init_params(jax.random.PRNGKey(0), cfg)
+            labels = label_tree(params)
+            opt = combine(
+                {
+                    "muon": muon(0.02, 0.02, period=period, block_specs=_blocks(params, degree)),
+                    "adamw": adamw(0.008),
+                },
+                labels,
+            )
+            state = init_train_state(params, opt)
+            fns = make_train_step_fns(cfg, opt, ShardCtx(), donate=False)
+            pipe = iter(SyntheticLM(cfg, 8, 64, seed=0))
+            t0 = time.time()
+            for t in range(steps):
+                b = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+                state, m = fns[phase_for_step(t, period)](state, b)
+            vb = {k: jnp.asarray(v) for k, v in next(iter(SyntheticLM(cfg, 8, 64, seed=99))).items()}
+            val = float(loss_fn(state.params, vb, cfg)[0])
+            us = (time.time() - t0) / steps * 1e6
+            pname = "inf" if period is None else str(period)
+            rows.append(row(f"period_sweep_deg{degree}_P{pname}", us, f"val={val:.3f}"))
+    return rows

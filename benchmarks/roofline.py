@@ -1,0 +1,165 @@
+"""Roofline analysis from the dry-run artifacts (assignment deliverable g).
+
+Reads experiments/dryrun/*.json and derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / (peak_FLOP/s per chip)       [s, per chip]
+  memory term     = HLO_bytes / (HBM bandwidth per chip)     [s, per chip]
+  collective term = collective_bytes / (ICI link bandwidth)  [s, per chip]
+
+cost_analysis() reports per-device (post-SPMD) FLOPs/bytes, so terms are
+per-chip already — no division by chip count needed. Conventions:
+collective bytes = sum of per-device result sizes of every collective op in
+the compiled HLO (the data each chip must receive).
+
+Also reports MODEL_FLOPS = 6*N*T (dense) or 6*N_active*T (MoE) and the
+usefulness ratio MODEL_FLOPS / (HLO_FLOPs x chips).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+from repro.configs import ARCHS, SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def param_counts(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts."""
+    D, F, L, V = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.padded_vocab
+    per_layer = 0.0
+    active_per_layer = 0.0
+    if cfg.num_heads:
+        attn = D * cfg.q_dim * 2 + D * cfg.kv_dim * 2
+        per_layer += attn
+        active_per_layer += attn
+    if cfg.num_experts:
+        expert = 3 * D * F
+        per_layer += cfg.num_experts * expert + D * cfg.num_experts
+        active_per_layer += cfg.top_k * expert
+    elif F:
+        nmat = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        per_layer += nmat * D * F
+        active_per_layer += nmat * D * F
+    if cfg.arch_type in ("ssm", "hybrid"):
+        d_inner = cfg.ssm_expand * D
+        nh = d_inner // cfg.ssm_head_dim
+        ssm = 2 * D * d_inner + 2 * D * cfg.ssm_state + D * nh + d_inner * D
+        per_layer += ssm
+        active_per_layer += ssm
+    total = L * per_layer + V * D * (1 if cfg.tie_embeddings else 2)
+    active = L * active_per_layer + V * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.encoder_layers:
+        enc = cfg.encoder_layers * (D * cfg.q_dim * 2 + D * cfg.kv_dim * 2 + 2 * D * F)
+        total += enc
+        active += enc
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*T for train; 2*N_active*T for prefill; 2*N_active*B for decode."""
+    _, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch  # decode: one token per sequence
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("skipped") or "error" in rec or "error" in rec.get("cost", {}):
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    # Prefer scan-trip-count-calibrated costs (see dryrun.calibrate_costs):
+    # raw cost_analysis counts each scanned layer body once.
+    cal = rec.get("calibrated") or {}
+    calibrated = bool(cal) and "error" not in cal
+    if calibrated:
+        flops = cal["flops"]
+        bytes_accessed = cal["bytes"]
+        coll = cal["collective_bytes"]
+    else:
+        flops = rec["cost"].get("flops", 0.0)
+        bytes_accessed = rec["cost"].get("bytes accessed", 0.0)
+        coll = rec.get("collective_bytes_total", 0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / (flops * chips) if flops else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "phase": rec.get("phase"),
+        "calibrated": calibrated,
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "hbm_temp_gb": (rec.get("memory", {}).get("temp_bytes") or 0) / 2**30,
+        "hbm_args_gb": (rec.get("memory", {}).get("argument_bytes") or 0) / 2**30,
+    }
+
+
+def load_all() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyze_record(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | phase | compute (ms) | memory (ms) | collective (ms) "
+           "| dominant | useful FLOP ratio | HBM temp (GB) |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['phase'] or '-'} "
+        f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} "
+        f"| **{r['dominant']}** | {r['useful_ratio']:.2f} | {r['hbm_temp_gb']:.1f} |\n"
+        for r in rows
+    )
+    return hdr + body
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    for r in load_all():
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}" + (
+            f"_{r['phase']}" if r["phase"] else ""
+        )
+        rows.append(
+            row(
+                name, 0.0,
+                f"compute={r['compute_s']*1e3:.2f}ms;memory={r['memory_s']*1e3:.2f}ms;"
+                f"collective={r['collective_s']*1e3:.2f}ms;dominant={r['dominant']};"
+                f"useful={r['useful_ratio']:.2f}",
+            )
+        )
+    if not rows:
+        rows.append(row("roofline_no_dryrun_results", 0.0, "run launch.dryrun first"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_all()))

@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
+for the paper artifact it reproduces):
+
+  ns_cost        — Sec 2.2/3 NS FLOPs + the Llama-405B 2.36x/9.06x claim
+  optimizer_step — Sec 2.2 per-optimizer step cost
+  dion_cost      — Sec C MuonBP-vs-Dion cost model
+  comm_volume    — Table 4 (throughput): optimizer collective bytes from HLO
+  convergence    — Tables 2/3: Muon/BlockMuon/MuonBP/Dion/AdamW losses
+  period_sweep   — Figure 1: loss vs period x blocking degree
+  param_norms    — Figure 2/8 + Table 6: parameter-norm growth
+  two_stepsize   — Theorem 2: tied vs untied stepsizes
+  roofline       — Sec Roofline: terms per (arch x shape x mesh) from dryrun
+
+Env: REPRO_BENCH_QUICK=1 for a fast pass; REPRO_BENCH_ONLY=mod1,mod2 to
+filter.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    "ns_cost",
+    "optimizer_step",
+    "dion_cost",
+    "convergence",
+    "period_sweep",
+    "param_norms",
+    "two_stepsize",
+    "comm_volume",
+    "roofline",
+]
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    only = os.environ.get("REPRO_BENCH_ONLY")
+    mods = only.split(",") if only else MODULES
+    print("name,us_per_call,derived")
+    for name in mods:
+        t0 = time.time()
+        try:
+            module = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for line in module.run(quick=quick):
+                print(line, flush=True)
+        except Exception:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}_FAILED,0.0,see_stderr", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

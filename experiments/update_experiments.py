@@ -1,0 +1,97 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/ + experiments/perf/ records.
+
+    PYTHONPATH=src:. python experiments/update_experiments.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import load_all, markdown_table  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def _load_perf(name):
+    with open(os.path.join(ROOT, "experiments", "perf", name + ".json")) as f:
+        d = json.load(f)
+    c = d.get("calibrated") or {}
+    mem = d.get("memory") or {}
+    return {
+        "flops": c.get("flops", 0.0),
+        "bytes": c.get("bytes", 0.0),
+        "coll": c.get("collective_bytes", 0.0),
+        "hbm": ((mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)) / 2**30,
+    }
+
+
+def _load_base(arch, shape, phase=None):
+    suffix = f"__{phase}" if phase else ""
+    path = os.path.join(ROOT, "experiments", "dryrun", f"{arch}__{shape}__16x16{suffix}.json")
+    with open(path) as f:
+        d = json.load(f)
+    c = d.get("calibrated") or {}
+    mem = d.get("memory") or {}
+    return {
+        "flops": c.get("flops", 0.0),
+        "bytes": c.get("bytes", 0.0),
+        "coll": c.get("collective_bytes", 0.0),
+        "hbm": ((mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)) / 2**30,
+    }
+
+
+def fmt_row(label, r):
+    tc = r["flops"] / 197e12 * 1e3
+    tm = r["bytes"] / 819e9 * 1e3
+    tl = r["coll"] / 50e9 * 1e3
+    return (f"| {label} | {tc:.1f} | {tm:.1f} | {tl:.1f} | {r['hbm']:.1f} |")
+
+
+def perf_table(rows):
+    hdr = ("| configuration | compute (ms) | memory (ms) | collective (ms) | HBM args+temp (GB) |\n"
+           "|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def dryrun_summary():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "experiments", "dryrun", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    ok = sum(1 for r in recs if not r.get("skipped") and "error" not in r)
+    skipped = sum(1 for r in recs if r.get("skipped"))
+    err = sum(1 for r in recs if "error" in r)
+    compile_times = [r["compile_s"] for r in recs if "compile_s" in r]
+    return (
+        f"Record count: **{ok} compiled OK**, {skipped} documented skips, {err} errors. "
+        f"Compile time (CPU host, 256/512 SPMD partitions): median "
+        f"{sorted(compile_times)[len(compile_times)//2]:.1f}s, max {max(compile_times):.1f}s.\n"
+    )
+
+
+def splice(text, marker, content):
+    assert marker in text, marker
+    return text.replace(marker, content)
+
+
+def main():
+    rows = [r for r in load_all()]
+    table = markdown_table(rows)
+
+    with open(EXP) as f:
+        text = f.read()
+
+    text = splice(text, "<!-- DRYRUN_SUMMARY -->", dryrun_summary())
+    text = splice(text, "<!-- ROOFLINE_TABLE -->", table)
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated (fill READING/PERF sections by hand)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Config registry: 10 assigned architectures + input shapes."""
+
+from repro.configs.base import SHAPES, InputShape, ModelConfig
+
+from repro.configs.granite_8b import CONFIG as _granite
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.phi4_mini_3_8b import CONFIG as _phi4
+from repro.configs.internvl2_1b import CONFIG as _internvl2
+from repro.configs.gemma2_9b import CONFIG as _gemma2
+from repro.configs.whisper_small import CONFIG as _whisper
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.olmoe_1b_7b import CONFIG as _olmoe
+from repro.configs.minitron_8b import CONFIG as _minitron
+from repro.configs.mamba2_1_3b import CONFIG as _mamba2
+from repro.configs.muonbp_paper import PAPER_CONFIGS
+
+ARCHS: dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        _granite,
+        _mixtral,
+        _phi4,
+        _internvl2,
+        _gemma2,
+        _whisper,
+        _hymba,
+        _olmoe,
+        _minitron,
+        _mamba2,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in ARCHS:
+        return ARCHS[name]
+    if name in PAPER_CONFIGS:
+        return PAPER_CONFIGS[name]
+    raise KeyError(
+        f"unknown arch {name!r}; available: {sorted(ARCHS) + sorted(PAPER_CONFIGS)}"
+    )
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+def shape_applies(cfg: ModelConfig, shape: InputShape) -> bool:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "PAPER_CONFIGS",
+    "get_config",
+    "get_shape",
+    "shape_applies",
+]

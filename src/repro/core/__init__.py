@@ -1,0 +1,46 @@
+"""Core: the paper's contribution — MuonBP and its baselines."""
+
+from repro.core.adamw import adamw
+from repro.core.blocking import (
+    BlockSpec2D,
+    block_spec_from_partition,
+    partition_blocks,
+    unpartition_blocks,
+)
+from repro.core.combine import apply_updates, combine, default_label_fn, label_tree
+from repro.core.dion import dion
+from repro.core.muon import (
+    Optimizer,
+    block_muon,
+    muon,
+    muon_full,
+    phase_for_step,
+)
+from repro.core.newton_schulz import (
+    JORDAN_COEFFS,
+    PAPER_COEFFS,
+    orthogonalize,
+    orthogonality_error,
+)
+
+__all__ = [
+    "adamw",
+    "apply_updates",
+    "BlockSpec2D",
+    "block_muon",
+    "block_spec_from_partition",
+    "combine",
+    "default_label_fn",
+    "dion",
+    "JORDAN_COEFFS",
+    "label_tree",
+    "muon",
+    "muon_full",
+    "Optimizer",
+    "orthogonality_error",
+    "orthogonalize",
+    "PAPER_COEFFS",
+    "partition_blocks",
+    "phase_for_step",
+    "unpartition_blocks",
+]

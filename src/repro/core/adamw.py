@@ -1,0 +1,85 @@
+"""AdamW (Loshchilov & Hutter 2019) — the paper's coordinate-wise baseline.
+
+Self-contained implementation (no optax in this environment). Used both as a
+baseline optimizer and as the scalar/1D/embedding optimizer inside the
+combined Muon setups (paper Sec 4.1: "separate learning rates for Adam,
+applied to 1D parameters and the input embedding").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.muon import Optimizer, _as_schedule
+
+
+class AdamWState(NamedTuple):
+    mu: object   # first moment
+    nu: object   # second moment
+    count: jax.Array
+
+
+def adamw(
+    learning_rate,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float | None = 1.0,
+) -> Optimizer:
+    """AdamW with decoupled weight decay and optional global-norm clipping.
+
+    The paper applies gradient clipping (1.0) to the AdamW-managed params.
+    """
+    lr_fn = _as_schedule(learning_rate)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, phase: str = "block"):
+        del phase  # coordinate-wise: no block/full distinction
+        count = state.count + 1
+        lr = lr_fn(count)
+
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)
+                )
+            )
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        new_mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        new_nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def per_param(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            upd = -lr * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            return upd.astype(p.dtype)
+
+        updates = jax.tree.map(per_param, new_mu, new_nu, params)
+        return updates, AdamWState(mu=new_mu, nu=new_nu, count=count)
+
+    return Optimizer(init=init, update=update)

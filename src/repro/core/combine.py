@@ -1,0 +1,91 @@
+"""Param-label multi-optimizer: Muon for hidden matrices, AdamW for the rest.
+
+Paper Sec 4.1/4.2: "separate learning rates for Adam (applied to 1D
+parameters and the input embedding) and Muon". ``combine`` splits the param
+pytree by a label function and routes each group to its own optimizer.
+
+Masking uses ``None`` leaves — ``jax.tree.map`` treats ``None`` as an empty
+subtree, so each sub-optimizer transparently sees only its own params.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.core.muon import Optimizer
+
+PyTree = Any
+LabelFn = Callable[[str, Any], str]
+
+
+class CombinedState(NamedTuple):
+    inner: dict  # label -> sub-optimizer state
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def default_label_fn(path: str, leaf) -> str:
+    """Paper's split: matrices -> muon; 1D/embeddings/unembeddings -> adamw.
+
+    Convolution filters and SSM per-head scalars also go to AdamW (standard
+    practice in Muon deployments; the paper's Megatron impl does the same for
+    non-matmul params).
+    """
+    lowered = path.lower()
+    if leaf.ndim < 2:
+        return "adamw"
+    for token in ("embed", "lm_head", "unembed", "conv", "meta_token"):
+        if token in lowered:
+            return "adamw"
+    return "muon"
+
+
+def label_tree(params: PyTree, label_fn: LabelFn = default_label_fn) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: label_fn(_path_str(path), leaf), params
+    )
+
+
+def _mask(tree: PyTree, labels: PyTree, label: str) -> PyTree:
+    return jax.tree.map(lambda x, l: x if l == label else None, tree, labels)
+
+
+def combine(optimizers: dict[str, Optimizer], labels: PyTree) -> Optimizer:
+    """Combine sub-optimizers; ``labels`` is a pytree of strings like params."""
+
+    label_names = sorted(optimizers)
+
+    def init(params):
+        return CombinedState(
+            inner={
+                name: optimizers[name].init(_mask(params, labels, name))
+                for name in label_names
+            }
+        )
+
+    def update(grads, state, params, phase: str = "block"):
+        flat_params, treedef = jax.tree.flatten_with_path(params)
+        merged: dict = {}
+        new_inner = {}
+        for name in label_names:
+            g = _mask(grads, labels, name)
+            p = _mask(params, labels, name)
+            upd, new_state = optimizers[name].update(g, state.inner[name], p, phase)
+            new_inner[name] = new_state
+            for path, leaf in jax.tree.flatten_with_path(upd)[0]:
+                merged[_path_str(path)] = leaf
+        flat_updates = [merged[_path_str(path)] for path, _ in flat_params]
+        updates = jax.tree.unflatten(
+            jax.tree.structure(params), flat_updates
+        )
+        return updates, CombinedState(inner=new_inner)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

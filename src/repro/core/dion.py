@@ -1,0 +1,95 @@
+"""Dion (Ahn et al. 2025) — low-rank orthonormalized updates baseline.
+
+The paper compares MuonBP against Dion (Table 2, Sec C). Dion maintains a
+persistent right-basis ``V in R^{n x r}`` per matrix and each step performs an
+amortized power iteration:
+
+    B = M + G                      (momentum + fresh gradient)
+    P = B V                        (m x r)
+    Q = orthonormalize(P)          (QR)
+    R = B^T Q                      (n x r)
+    M <- B - (1 - mu) Q R^T        (error feedback keeps the residual)
+    V <- column_normalize(R)
+    dX = -lr * scale * Q V_hat^T   (orthonormal low-rank update)
+
+Communication never scales with m*n — only with (m+n) r — which is Dion's
+selling point; the cost-model comparison against MuonBP lives in
+``benchmarks/dion_cost.py`` (paper Sec C).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.muon import Optimizer, _as_schedule
+
+
+class DionState(NamedTuple):
+    momentum: object   # per-matrix (m, n)
+    basis: object      # per-matrix (n, r)
+    count: jax.Array
+
+
+def _column_normalize(x, eps=1e-8):
+    return x / (jnp.linalg.norm(x, axis=-2, keepdims=True) + eps)
+
+
+def dion(
+    learning_rate,
+    *,
+    rank: int = 64,
+    momentum: float = 0.95,
+    weight_decay: float = 0.0,
+    rms_target: float = 0.2,
+) -> Optimizer:
+    lr_fn = _as_schedule(learning_rate)
+    mu = momentum
+
+    def init(params):
+        def init_leaf(p):
+            if p.ndim < 2:
+                raise ValueError("dion only manages matrices; use combine()")
+            n = p.shape[-1]
+            r = min(rank, min(p.shape[-2], n))
+            # Deterministic full-rank init basis (orthonormalized iota mix).
+            key = jax.random.PRNGKey(n * 1315423911 % (2**31))
+            v = jax.random.normal(key, (*p.shape[:-2], n, r), jnp.float32)
+            return _column_normalize(v)
+
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        basis = jax.tree.map(init_leaf, params)
+        return DionState(momentum=zeros, basis=basis, count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, phase: str = "block"):
+        del phase
+        count = state.count + 1
+        lr = lr_fn(count)
+
+        def per_param(g, m, v, p):
+            b = m + g.astype(jnp.float32)
+            pmat = b @ v                                  # (.., m, r)
+            q, _ = jnp.linalg.qr(pmat)                    # orthonormal (m, r)
+            r_mat = jnp.swapaxes(b, -1, -2) @ q           # (.., n, r)
+            new_m = b - (1.0 - mu) * (q @ jnp.swapaxes(r_mat, -1, -2))
+            new_v = _column_normalize(r_mat)
+            mdim, ndim = p.shape[-2], p.shape[-1]
+            scale = rms_target * float(max(mdim, ndim)) ** 0.5
+            upd = -lr * scale * (q @ jnp.swapaxes(new_v, -1, -2))
+            if weight_decay:
+                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            return upd.astype(p.dtype), new_m, new_v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.momentum)
+        flat_v = treedef.flatten_up_to(state.basis)
+        out = [per_param(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return updates, DionState(momentum=new_m, basis=new_v, count=count)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,84 @@
+"""Newton-Schulz orthogonalization (paper Algorithm 2).
+
+``Orth(G) = (G G^T)^{-1/2} G`` approximated with K iterations of the matrix
+polynomial ``X <- a X + (b A + c A^2) X`` where ``A = X X^T``.
+
+Two coefficient sets are provided:
+  * ``PAPER_COEFFS``  = (2, -1.5, 0.5)            -- paper Algorithm 2 (cubic)
+  * ``JORDAN_COEFFS`` = (3.4445, -4.7750, 2.0315) -- Jordan et al. production
+    quintic tuned for fewer steps (referenced in paper Sec 2.2).
+
+The implementation is batched: it operates on the trailing two dims and maps
+over any leading dims (layer-stacked or block-stacked parameters).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+PAPER_COEFFS = (2.0, -1.5, 0.5)
+JORDAN_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def _ns_iterations(x: jax.Array, steps: int, coeffs) -> jax.Array:
+    a, b, c = coeffs
+
+    def body(x, _):
+        gram = x @ jnp.swapaxes(x, -1, -2)            # A = X X^T   (.., m, m)
+        poly = b * gram + c * (gram @ gram)           # B = bA + cA^2
+        return a * x + poly @ x, None
+
+    from repro.models.layers import scan_unroll
+
+    x, _ = jax.lax.scan(
+        body, x, None, length=steps, unroll=True if scan_unroll() else 1
+    )
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "coeffs", "eps"))
+def orthogonalize(
+    g: jax.Array,
+    steps: int = 5,
+    coeffs=PAPER_COEFFS,
+    eps: float = 1e-7,
+) -> jax.Array:
+    """Approximate ``Orth(g)`` over the trailing two dims.
+
+    Always iterates on the smaller side: if m > n we orthogonalize ``g^T`` and
+    transpose back, so the Gram matrix is ``min(m,n)^2``. Computation is done
+    in fp32 regardless of input dtype (NS is numerically delicate in bf16),
+    and cast back at the end — matching the paper's mixed-precision setup.
+    """
+    if g.ndim < 2:
+        raise ValueError(f"orthogonalize expects a matrix, got shape {g.shape}")
+    orig_dtype = g.dtype
+    x = g.astype(jnp.float32)
+    m, n = x.shape[-2], x.shape[-1]
+    transpose = m > n
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    # Normalize so the spectral norm is <= 1 (fro-norm upper bounds spectral).
+    norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
+    x = x / (norm + eps)
+    x = _ns_iterations(x, steps, coeffs)
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    return x.astype(orig_dtype)
+
+
+def orthogonality_error(x: jax.Array) -> jax.Array:
+    """|| X X^T - I ||_F / sqrt(m) over trailing dims, iterating smaller side.
+
+    Diagnostic used by tests and the parameter-norm benchmark.
+    """
+    x = x.astype(jnp.float32)
+    if x.shape[-2] > x.shape[-1]:
+        x = jnp.swapaxes(x, -1, -2)
+    m = x.shape[-2]
+    gram = x @ jnp.swapaxes(x, -1, -2)
+    eye = jnp.eye(m, dtype=x.dtype)
+    return jnp.linalg.norm(gram - eye, axis=(-2, -1)) / jnp.sqrt(m)

@@ -1,0 +1,56 @@
+"""LR schedules used in the paper's experiments.
+
+Paper Sec 4.2: cosine decay (no warmup) for 960M/1.2B; Warmup-Stable-Decay
+(WSD, Hagele et al. 2024) with linear decay for the 8B runs and the 160M Dion
+comparison (no warmup, 20% cooldown).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(peak_lr: float, total_steps: int, warmup_steps: int = 0, final_frac: float = 0.0):
+    def schedule(count):
+        count = count.astype(jnp.float32)
+        warm = count / jnp.maximum(warmup_steps, 1)
+        progress = (count - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        progress = jnp.clip(progress, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return peak_lr * jnp.where(count < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def wsd(
+    peak_lr: float,
+    total_steps: int,
+    warmup_steps: int = 0,
+    decay_frac: float = 0.2,
+    final_lr: float = 0.0,
+):
+    """Warmup-Stable-Decay with linear cooldown over the last decay_frac."""
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def schedule(count):
+        count = count.astype(jnp.float32)
+        warm = count / jnp.maximum(warmup_steps, 1)
+        decay_progress = jnp.clip(
+            (count - decay_start) / jnp.maximum(total_steps - decay_start, 1), 0.0, 1.0
+        )
+        lr = jnp.where(
+            count < warmup_steps,
+            peak_lr * warm,
+            jnp.where(
+                count < decay_start,
+                peak_lr,
+                peak_lr + (final_lr - peak_lr) * decay_progress,
+            ),
+        )
+        return lr
+
+    return schedule

@@ -1,0 +1,53 @@
+"""jit'd wrappers: full Newton-Schulz orthogonalization on Pallas kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.newton_schulz import PAPER_COEFFS
+from repro.kernels.newton_schulz.newton_schulz import fma_matmul, matmul
+
+
+def ns_iteration(x: jax.Array, coeffs=PAPER_COEFFS, *, interpret: bool = False) -> jax.Array:
+    """One NS step on a 2D matrix via the Pallas kernels.
+
+    A = X X^T; P = bA + cA^2; Y = aX + P X  — 3 kernel launches, the two
+    polynomial steps use the fused-epilogue kernel.
+    """
+    a, b, c = coeffs
+    gram = matmul(x, x.T, interpret=interpret)                     # A = X X^T
+    poly = fma_matmul(gram, gram, gram, alpha=b, beta=c, interpret=interpret)
+    return fma_matmul(poly, x, x, alpha=a, beta=1.0, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "coeffs", "interpret", "eps"))
+def orthogonalize(
+    g: jax.Array,
+    steps: int = 5,
+    coeffs=PAPER_COEFFS,
+    *,
+    eps: float = 1e-7,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pallas-kernel Newton-Schulz orthogonalization of a 2D matrix.
+
+    Matches ``repro.core.newton_schulz.orthogonalize`` (the pure-jnp version
+    used by the optimizer) and ``ref.newton_schulz_ref``; iterates on the
+    smaller side, fp32 internally.
+    """
+    if g.ndim != 2:
+        raise ValueError("kernel path expects a single matrix; vmap for batches")
+    orig_dtype = g.dtype
+    x = g.astype(jnp.float32)
+    transpose = x.shape[0] > x.shape[1]
+    if transpose:
+        x = x.T
+    x = x / (jnp.linalg.norm(x) + eps)
+    for _ in range(steps):
+        x = ns_iteration(x, coeffs, interpret=interpret)
+    if transpose:
+        x = x.T
+    return x.astype(orig_dtype)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Newton-Schulz Pallas kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """fp32-accumulating matmul, output in x.dtype."""
+    out = jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+def fma_matmul_ref(a, b, c, alpha: float, beta: float) -> jnp.ndarray:
+    """alpha * c + beta * (a @ b), fp32 accumulation."""
+    out = alpha * c.astype(jnp.float32) + beta * jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    return out.astype(a.dtype)
+
+
+def ns_iteration_ref(x: jnp.ndarray, coeffs) -> jnp.ndarray:
+    """One Newton-Schulz step: X <- aX + (bA + cA^2) X with A = X X^T."""
+    a, b, c = coeffs
+    xf = x.astype(jnp.float32)
+    gram = xf @ xf.T
+    poly = b * gram + c * (gram @ gram)
+    return (a * xf + poly @ xf).astype(x.dtype)
+
+
+def newton_schulz_ref(g: jnp.ndarray, steps: int, coeffs, eps: float = 1e-7) -> jnp.ndarray:
+    """Full orthogonalization oracle (matches core.newton_schulz semantics)."""
+    x = g.astype(jnp.float32)
+    transpose = x.shape[0] > x.shape[1]
+    if transpose:
+        x = x.T
+    x = x / (jnp.linalg.norm(x) + eps)
+    for _ in range(steps):
+        x = ns_iteration_ref(x, coeffs)
+    if transpose:
+        x = x.T
+    return x.astype(g.dtype)

@@ -1,0 +1,420 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+For each combination this builds ShapeDtypeStruct stand-ins (weak-type
+correct, sharded, ZERO device allocation) for params, optimizer state, and
+inputs; lowers the appropriate step function under the production mesh;
+compiles it; and records
+
+  * memory_analysis (bytes per device — proves the config fits HBM)
+  * cost_analysis   (per-device HLO FLOPs + bytes for the roofline)
+  * the collective schedule parsed from the post-SPMD HLO (per-op counts
+    and per-device bytes for all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute) — cost_analysis does not report these.
+
+Train shapes lower BOTH MuonBP phases ('block' and 'full') — the delta in
+collective bytes between them IS the paper's claim (Sec 3.2: block steps add
+zero optimizer communication; amortized optimizer comm is 1/P of Muon's).
+
+Results append to experiments/dryrun/<arch>__<shape>__<mesh>[__phase].json
+(resumable; ``--all`` skips combos already on disk).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, get_shape, shape_applies
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import adamw, combine, label_tree, muon
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import decode_step, init_params, prefill
+from repro.models.transformer import init_cache
+from repro.sharding import specs as sh
+from repro.training.train_step import TrainState, train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\S+?)\[([\d,]*)\]\S*\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op in post-SPMD HLO."""
+    out: dict[str, dict] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        nbytes = DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for the input batch of this shape."""
+    bspecs = sh.input_batch_specs(cfg, shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    if shape.kind in ("train", "prefill"):
+        text = S - (cfg.vision_tokens or 0)
+        batch["tokens"] = _sds((B, text), jnp.int32, mesh, bspecs["tokens"])
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, text), jnp.int32, mesh, bspecs["labels"])
+        if cfg.arch_type == "vlm":
+            batch["vision_embeds"] = _sds(
+                (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16, mesh,
+                bspecs["vision_embeds"],
+            )
+        if cfg.arch_type == "audio":
+            batch["audio_frames"] = _sds(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16, mesh,
+                bspecs["audio_frames"],
+            )
+    else:  # decode
+        batch["tokens"] = _sds((B, 1), jnp.int32, mesh, bspecs["tokens"])
+        if cfg.arch_type == "audio":
+            baxes = sh.batch_axes_for(B, mesh)
+            batch["encoder_out"] = _sds(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16, mesh,
+                P(baxes if baxes else None, None, None),
+            )
+    return batch
+
+
+def abstract_params(cfg: ModelConfig, mesh, dtype=jnp.float32):
+    """Abstract (no-allocation) params with NamedShardings attached."""
+    a_params = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, dtype=dtype), jax.random.PRNGKey(0)
+    )
+    pspecs = sh.param_specs(a_params, cfg, mesh)
+    return (
+        jax.tree.map(
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s)),
+            a_params,
+            pspecs,
+        ),
+        pspecs,
+    )
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16,
+                   cache_len: int | None = None, kv_seq_shard: bool = False):
+    a_cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, cache_len or shape.seq_len, dtype)
+    )
+    cspecs = sh.cache_specs(cfg, shape, mesh, kv_seq_shard=kv_seq_shard,
+                            cache_len=cache_len)
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s)),
+        a_cache,
+        cspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def make_optimizer(cfg: ModelConfig, mesh, a_params, pspecs, period=5, distribute_full=None):
+    labels = label_tree(a_params)
+    bspecs = sh.block_specs_for(a_params, pspecs, mesh)
+    # Only pass block specs for muon-managed leaves (BlockSpec pytree must
+    # match the masked tree; mask non-muon leaves to BlockSpec(1,1)).
+    opt_muon = muon(1e-3, 1e-3, period=period, block_specs=jax.tree.map(
+        lambda l, b: b if l == "muon" else None, labels, bspecs),
+        distribute_full=distribute_full)
+    return combine({"muon": opt_muon, "adamw": adamw(3e-4)}, labels)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None = None):
+    """Build + lower the step function for one (cfg, shape) on a mesh.
+
+    ``variant`` holds beyond-paper optimization knobs for the Perf loop:
+      distribute_full: bool — layer-distributed full-step NS over 'data'
+      accum_steps: int      — gradient-accumulation microbatching
+      ring_cache: bool      — window-sized ring KV cache for SWA decode
+    """
+    v = variant or {}
+    if v.get("flash_block_k"):
+        ctx = ctx._replace(flash_block_k=int(v["flash_block_k"]))
+    if shape.kind == "train":
+        a_params, pspecs = abstract_params(cfg, mesh, jnp.float32)
+        dist = (mesh, "data") if v.get("distribute_full") else None
+        optimizer = make_optimizer(cfg, mesh, a_params, pspecs, period=period,
+                                   distribute_full=dist)
+        a_opt = jax.eval_shape(optimizer.init, a_params)
+        a_opt = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a_opt)
+        # momentum trees: reuse param shardings by structure-matching paths
+        a_opt = _attach_opt_shardings(a_opt, a_params, mesh, zero1=bool(v.get("zero1")))
+        a_state = TrainState(params=a_params, opt_state=a_opt,
+                             step=jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())))
+        batch = input_specs(cfg, shape, mesh)
+        step = functools.partial(train_step, cfg=cfg, optimizer=optimizer, ctx=ctx,
+                                 phase=phase, accum_steps=v.get("accum_steps", 1),
+                                 bf16_grads=bool(v.get("bf16_grads")))
+        return jax.jit(step, donate_argnums=(0,)).lower(a_state, batch)
+    if shape.kind == "prefill":
+        a_params, _ = abstract_params(cfg, mesh, jnp.bfloat16)
+        batch = input_specs(cfg, shape, mesh)
+        fn = functools.partial(prefill, cfg=cfg, ctx=ctx)
+        return jax.jit(fn).lower(a_params, batch)
+    # decode
+    a_params, _ = abstract_params(cfg, mesh, jnp.bfloat16)
+    batch = input_specs(cfg, shape, mesh)
+    ring = bool(v.get("ring_cache"))
+    cache_len = cfg.window_size if ring else None
+    a_cache = abstract_cache(cfg, shape, mesh, cache_len=cache_len,
+                             kv_seq_shard=bool(v.get("kv_seq_shard")))
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+
+    def fn(params, token, cache, pos, encoder_out=None):
+        return decode_step(params, token, cache, pos, cfg, ctx=ctx,
+                           encoder_out=encoder_out, ring_cache=ring)
+
+    args = (a_params, batch["tokens"], a_cache, pos)
+    kwargs = {}
+    if "encoder_out" in batch:
+        kwargs["encoder_out"] = batch["encoder_out"]
+    return jax.jit(fn, donate_argnums=(2,)).lower(*args, **kwargs)
+
+
+def _cost_of(compiled) -> dict:
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        return {k: v for k, v in cost.items() if k in ("flops", "bytes accessed", "transcendentals")}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def calibrate_costs(cfg, shape, mesh, ctx, phase: str, period: int, full_layers: int,
+                    variant: dict | None = None):
+    """Scan-trip-count-corrected costs via small-L fully-unrolled compiles.
+
+    XLA's cost_analysis counts each while-loop body ONCE, so the full-config
+    compile undercounts FLOPs/bytes/collectives by ~num_layers (and by the
+    flash/SSD inner-scan trip counts). We compile L=2 and L=4 variants with
+    every scan fully unrolled (REPRO_UNROLL_SCANS=1), fit
+    cost(L) = base + L*per_layer, and extrapolate to the real L.
+    """
+    import dataclasses
+
+    os.environ["REPRO_UNROLL_SCANS"] = "1"
+    try:
+        samples = {}
+        for L in (2, 4):
+            cfg_l = dataclasses.replace(
+                cfg,
+                num_layers=L,
+                encoder_layers=L if cfg.encoder_layers else 0,
+            )
+            compiled = _lower(cfg_l, shape, mesh, ctx, phase, period, variant).compile()
+            cost = _cost_of(compiled)
+            coll = parse_collectives(compiled.as_text())
+            samples[L] = {
+                "flops": cost.get("flops", 0.0),
+                "bytes": cost.get("bytes accessed", 0.0),
+                "collective_bytes": sum(v["bytes"] for v in coll.values()),
+            }
+    finally:
+        os.environ.pop("REPRO_UNROLL_SCANS", None)
+
+    out = {}
+    for key in ("flops", "bytes", "collective_bytes"):
+        per_layer = (samples[4][key] - samples[2][key]) / 2.0
+        base = samples[2][key] - 2.0 * per_layer
+        out[key] = max(base + full_layers * per_layer, 0.0)
+    out["samples"] = samples
+    return out
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False, phase: str = "block",
+                period: int = 5, calibrate: bool = True, variant: dict | None = None):
+    """Lower+compile one combination; returns the result record."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not shape_applies(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch: long_500k requires sub-quadratic attention (DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = sh.make_ctx(cfg, mesh, global_batch=shape.global_batch)
+    t0 = time.time()
+    lowered = _lower(cfg, shape, mesh, ctx, phase, period, variant)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        memory = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not support it
+        memory = {"error": str(e)}
+
+    cost = _cost_of(compiled)
+    collectives = parse_collectives(compiled.as_text())
+
+    calibrated = None
+    if calibrate:
+        try:
+            calibrated = calibrate_costs(cfg, shape, mesh, ctx, phase, period,
+                                         cfg.num_layers, variant)
+        except Exception as e:
+            calibrated = {"error": str(e)}
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "phase": phase if shape.kind == "train" else None,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": memory,
+        "cost": cost,
+        "collectives": collectives,
+        "collective_bytes_total": sum(v["bytes"] for v in collectives.values()),
+        "calibrated": calibrated,
+        "variant": variant,
+    }
+
+
+def _attach_opt_shardings(a_opt, a_params, mesh, zero1: bool = False):
+    """Momentum/mu/nu trees mirror the param tree; give them param shardings.
+
+    ``zero1``: additionally shard each state tensor's leading (layer-stack)
+    dim over the 'data' axis when divisible — ZeRO-1 optimizer-state
+    partitioning on top of tensor parallelism. GSPMD then slices gradients
+    locally (they are already data-replicated post-allreduce) and
+    all-gathers the updates at apply time, trading one params-sized gather
+    per step for a data_size-fold cut in optimizer-state HBM.
+    """
+    param_shardings = jax.tree.map(lambda x: x.sharding, a_params)
+    flat_shard = {  # path string -> sharding
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path): s
+        for path, s in jax.tree.flatten_with_path(param_shardings)[0]
+    }
+    data_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+
+    def attach(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        # find the param-path suffix inside the opt-state path
+        for start in range(len(keys)):
+            cand = "/".join(keys[start:])
+            if cand in flat_shard:
+                shard = flat_shard[cand]
+                if zero1 and leaf.ndim >= 2:
+                    spec = list(shard.spec) + [None] * (leaf.ndim - len(shard.spec))
+                    if spec[0] is None and leaf.shape[0] % data_size == 0:
+                        spec[0] = "data"
+                        shard = NamedSharding(mesh, P(*spec))
+                return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=shard)
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P(*(None,) * leaf.ndim))
+        )
+
+    return jax.tree_util.tree_map_with_path(attach, a_opt)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def result_path(arch, shape, multi_pod, phase):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    name = f"{arch}__{shape}__{mesh}"
+    if phase:
+        name += f"__{phase}"
+    return os.path.join(RESULTS_DIR, name + ".json")
+
+
+def run_and_save(arch, shape, multi_pod, phase, skip_existing=True):
+    path = result_path(arch, shape, multi_pod, phase if get_shape(shape).kind == "train" else None)
+    if skip_existing and os.path.exists(path):
+        print(f"[skip existing] {path}")
+        return
+    label = f"{arch} x {shape} x {'2x16x16' if multi_pod else '16x16'}" + (f" x {phase}" if phase else "")
+    print(f"[dryrun] {label} ...", flush=True)
+    try:
+        rec = lower_combo(arch, shape, multi_pod=multi_pod, phase=phase or "block")
+    except Exception:
+        rec = {"arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16",
+               "phase": phase, "error": traceback.format_exc()}
+        print(rec["error"], flush=True)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "SKIPPED" if rec.get("skipped") else ("ERROR" if "error" in rec else "ok")
+    print(f"[dryrun] {label}: {status} "
+          f"(compile {rec.get('compile_s', '-')}s, coll {rec.get('collective_bytes_total', '-')} B)",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--phase", default=None, choices=[None, "block", "full"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true", help="re-run existing results")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                kind = SHAPES[shape].kind
+                phases = ["block", "full"] if kind == "train" else [None]
+                for phase in phases:
+                    combos.append((arch, shape, args.multi_pod, phase))
+    else:
+        kind = SHAPES[args.shape].kind
+        phases = [args.phase] if (args.phase or kind != "train") else ["block", "full"]
+        combos = [(args.arch, args.shape, args.multi_pod, p) for p in phases]
+
+    for arch, shape, mp, phase in combos:
+        run_and_save(arch, shape, mp, phase, skip_existing=not args.force)
+
+
+if __name__ == "__main__":
+    main()

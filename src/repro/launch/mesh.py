@@ -1,0 +1,36 @@
+"""Production mesh: TPU v5e, 256 chips/pod, (data=16, model=16) per pod.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). The dry-run launcher forces 512 host platform devices
+*before* importing anything from repro (see launch/dryrun.py lines 1-2).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before jax initializes"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_local_mesh(model: int | None = None, data: int | None = None) -> jax.sharding.Mesh:
+    """Best-effort mesh over whatever devices exist (CPU tests, small runs)."""
+    n = len(jax.devices())
+    if model is None:
+        model = 1
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"), devices=jax.devices()[: data * model])

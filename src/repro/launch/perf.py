@@ -1,0 +1,84 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb runner (EXPERIMENTS.md §Perf).
+
+Measures a named (arch x shape x phase x variant) combination with the same
+lower+compile+calibrate pipeline as the dry-run and stores the record under
+experiments/perf/<name>.json. The hypothesis -> change -> before/after log
+lives in EXPERIMENTS.md; this is the measurement tool.
+
+Usage:
+  python -m repro.launch.perf --name granite_full_dist \
+      --arch granite-8b --shape train_4k --phase full --distribute-full
+"""
+
+import argparse
+import json
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "perf"
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--name", required=True)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--phase", default="block")
+    ap.add_argument("--period", type=int, default=5)
+    ap.add_argument("--distribute-full", action="store_true")
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--ring-cache", action="store_true")
+    ap.add_argument("--kv-seq-shard", action="store_true")
+    ap.add_argument("--flash-block-k", type=int, default=0)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--bf16-grads", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    path = os.path.join(RESULTS_DIR, args.name + ".json")
+    if os.path.exists(path) and not args.force:
+        print(f"[skip existing] {path}")
+        return
+
+    from repro.launch.dryrun import lower_combo
+
+    variant = {}
+    if args.distribute_full:
+        variant["distribute_full"] = True
+    if args.accum_steps > 1:
+        variant["accum_steps"] = args.accum_steps
+    if args.ring_cache:
+        variant["ring_cache"] = True
+    if args.kv_seq_shard:
+        variant["kv_seq_shard"] = True
+    if args.flash_block_k:
+        variant["flash_block_k"] = args.flash_block_k
+    if args.zero1:
+        variant["zero1"] = True
+    if args.bf16_grads:
+        variant["bf16_grads"] = True
+
+    rec = lower_combo(
+        args.arch, args.shape, phase=args.phase, period=args.period,
+        variant=variant or None,
+    )
+    rec["perf_name"] = args.name
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    cal = rec.get("calibrated") or {}
+    print(f"[perf] {args.name}: compile {rec.get('compile_s')}s")
+    if "flops" in cal:
+        print(f"  calibrated flops/dev  : {cal['flops']:.4g}")
+        print(f"  calibrated bytes/dev  : {cal['bytes']:.4g}")
+        print(f"  calibrated coll bytes : {cal['collective_bytes']:.4g}")
+    mem = rec.get("memory", {})
+    print(f"  HBM args+temp GB      : "
+          f"{((mem.get('argument_bytes') or 0) + (mem.get('temp_bytes') or 0))/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Training launcher: config-driven MuonBP pretraining.
+
+Runs on whatever devices exist (CPU: 1-device mesh; TPU pod: pass
+--mesh-model/--mesh-data to match the slice). The MuonBP phase schedule is
+driven here: two compiled step functions, ``step % P == 0`` picks 'full'.
+
+Example (CPU-scale):
+  PYTHONPATH=src python -m repro.launch.train \
+      --arch granite-8b --reduced --steps 200 --batch 8 --seq 128 \
+      --optimizer muonbp --period 5 --lr 0.02
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import adamw, block_muon, combine, dion, label_tree, muon, muon_full
+from repro.core.muon import phase_for_step
+from repro.core.schedule import cosine, wsd
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import init_params
+from repro.sharding import specs as sh
+from repro.training import checkpoint
+from repro.training.train_step import init_train_state, make_train_step_fns
+
+
+def build_optimizer(name, params, *, lr, adam_lr, period, schedule_fn=None,
+                    block_specs=None, rank=64, weight_decay=0.1):
+    labels = label_tree(params)
+    lr_s = schedule_fn(lr) if schedule_fn else lr
+    adam_s = schedule_fn(adam_lr) if schedule_fn else adam_lr
+    if name == "adamw":
+        return combine({"adamw": adamw(adam_s, weight_decay=weight_decay)},
+                       jax.tree.map(lambda _: "adamw", labels)), None
+    if name == "dion":
+        matrix_opt = dion(lr_s, rank=rank, weight_decay=weight_decay)
+    elif name == "muon":
+        matrix_opt = muon_full(lr_s, weight_decay=weight_decay, block_specs=block_specs)
+    elif name == "blockmuon":
+        matrix_opt = block_muon(lr_s, weight_decay=weight_decay, block_specs=block_specs)
+    elif name == "muonbp":
+        matrix_opt = muon(lr_s, lr_s, period=period, weight_decay=weight_decay,
+                          block_specs=block_specs)
+    else:
+        raise ValueError(name)
+    period_eff = {"muon": 1, "blockmuon": None, "dion": 1, "muonbp": period}[name]
+    return combine({"muon": matrix_opt, "adamw": adamw(adam_s, weight_decay=weight_decay)},
+                   labels), period_eff
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="muonbp-960m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--optimizer", default="muonbp",
+                    choices=["muonbp", "muon", "blockmuon", "adamw", "dion"])
+    ap.add_argument("--period", type=int, default=5)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--adam-lr", type=float, default=0.008)
+    ap.add_argument("--schedule", default="wsd", choices=["wsd", "cosine", "const"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--log-file", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    mesh = make_local_mesh(model=args.mesh_model)
+    ctx = sh.make_ctx(cfg, mesh)
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    pspecs = sh.param_specs(params, cfg, mesh)
+    params = jax.device_put(params, sh.named(mesh, pspecs))
+    bspecs = sh.block_specs_for(params, pspecs, mesh)
+    labels = label_tree(params)
+    bspecs = jax.tree.map(lambda b, l: b if l == "muon" else None, bspecs, labels)
+
+    sched = {"wsd": lambda peak: wsd(peak, args.steps),
+             "cosine": lambda peak: cosine(peak, args.steps),
+             "const": lambda peak: peak}[args.schedule]
+    optimizer, period = build_optimizer(
+        args.optimizer, params, lr=args.lr, adam_lr=args.adam_lr,
+        period=args.period, schedule_fn=sched, block_specs=bspecs,
+    )
+
+    state = init_train_state(params, optimizer)
+    fns = make_train_step_fns(cfg, optimizer, ctx)
+    pipe = iter(SyntheticLM(cfg, args.batch, args.seq, seed=args.seed))
+
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M optimizer={args.optimizer} "
+          f"period={period} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    log = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        phase = phase_for_step(step, period) if args.optimizer != "adamw" else "block"
+        state, metrics = fns[phase](state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            rec = {"step": step, "loss": round(loss, 4), "phase": phase,
+                   "wall_s": round(time.time() - t0, 1)}
+            log.append(rec)
+            print(json.dumps(rec), flush=True)
+        if args.checkpoint_every and step and step % args.checkpoint_every == 0:
+            checkpoint.save(args.checkpoint_dir, state.params, state.opt_state, step)
+    if args.log_file:
+        with open(args.log_file, "w") as f:
+            json.dump({"args": vars(args), "log": log}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

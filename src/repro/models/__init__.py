@@ -1,0 +1,1 @@
+"""Model zoo: composable dense / MoE / SSM / hybrid / enc-dec / VLM stacks."""

@@ -1,0 +1,74 @@
+"""Whisper-style encoder (bidirectional) consuming stubbed frame embeddings.
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment
+carve-out: ``input_specs()`` provides (B, encoder_seq, d_model) frame
+embeddings. This module implements the transformer encoder; the decoder
+(causal self-attn + cross-attn) lives in transformer.py via the shared
+``decoder_layer``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    attention_block,
+    rms_norm,
+    scan_unroll,
+    sinusoidal_positions,
+)
+
+
+def init_encoder_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    from repro.models.transformer import _dense_init, _norm_init
+
+    L, D, F = cfg.encoder_layers, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 8)
+    return {
+        "attn": {
+            "wq": _dense_init(keys[0], (L, D, cfg.q_dim), dtype),
+            "wk": _dense_init(keys[1], (L, D, cfg.kv_dim), dtype),
+            "wv": _dense_init(keys[2], (L, D, cfg.kv_dim), dtype),
+            "wo": _dense_init(keys[3], (L, cfg.q_dim, D), dtype),
+        },
+        "mlp": {
+            "wi": _dense_init(keys[4], (L, D, F), dtype),
+            "wo": _dense_init(keys[5], (L, F, D), dtype),
+        },
+        "norms": {
+            "attn_norm": _norm_init(cfg, (L, D), dtype),
+            "mlp_norm": _norm_init(cfg, (L, D), dtype),
+        },
+        "final_norm": _norm_init(cfg, (D,), dtype),
+    }
+
+
+def encode(enc_params: dict, frames: jax.Array, cfg: ModelConfig, ctx=None) -> jax.Array:
+    """frames: (B, S_enc, D) stub embeddings -> (B, S_enc, D) encodings."""
+    seq = frames.shape[1]
+    x = frames + sinusoidal_positions(seq, cfg.d_model).astype(frames.dtype)[None]
+    positions = jnp.arange(seq)
+
+    def body(x, layer):
+        h = rms_norm(x, layer["norms"]["attn_norm"])
+        attn_out, _ = attention_block(
+            h, layer["attn"],
+            num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim,
+            positions=positions,
+            inv_freq=None,
+            causal=False,
+            q_layout=ctx.q_layout if ctx else "head",
+            kv_layout=ctx.kv_layout if ctx else "head",
+        )
+        x = x + attn_out
+        h = rms_norm(x, layer["norms"]["mlp_norm"])
+        x = x + jax.nn.gelu(h @ layer["mlp"]["wi"], approximate=True) @ layer["mlp"]["wo"]
+        return x, None
+
+    stacked = {k: enc_params[k] for k in ("attn", "mlp", "norms")}
+    x, _ = jax.lax.scan(body, x, stacked, unroll=True if scan_unroll() else 1)
+    return rms_norm(x, enc_params["final_norm"])

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts block: megablocks-style local routing under shard_map.
+
+Why shard_map (see DESIGN.md): token routing involves a sort + gather /
+scatter-add. Left to GSPMD, a sort over the (data-sharded) token dimension
+forces an all-gather of the token stream. Wrapping the block in shard_map
+keeps routing *local to each data shard* (exactly what Megablocks/Megatron
+do per-rank) while the per-expert FFN weights stay tensor-parallel over the
+``model`` axis with one explicit psum for the contracted d_ff dimension.
+
+Routing is capacity-based (GShard-style dropping, capacity_factor
+configurable; tests use a capacity that makes it dropless):
+
+  1. router logits -> top-k experts + gate weights per token
+  2. flat (token, expert) assignments sorted by expert id
+  3. rank-within-expert via searchsorted; slots beyond capacity are dropped
+  4. dense (E, C, D) buffer -> expert SwiGLU (TP over d_ff, psum) -> (E, C, D)
+  5. gather back + scatter-add into token order with gate weights
+
+Supports both routing styles: mixtral (top-k then softmax over selected) and
+olmoe (softmax over all experts then top-k). Aux losses: load-balance
+(Switch) + router z-loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+
+
+def _route(logits: jax.Array, top_k: int, style: str):
+    """logits: (T, E) fp32 -> (gates (T,k), experts (T,k))."""
+    if style == "topk_softmax":  # mixtral: select then softmax over selected
+        top_logits, top_idx = jax.lax.top_k(logits, top_k)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+    elif style == "softmax_topk":  # olmoe: softmax over all, select, renorm
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, top_idx = jax.lax.top_k(probs, top_k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    else:
+        raise ValueError(f"unknown router style {style!r}")
+    return gates, top_idx
+
+
+def _local_moe(
+    x, router, wi, wg, wo, *, top_k, capacity_factor, router_style, model_axis
+):
+    """Per-device computation. x: (b, S, D); wi/wg: (E, D, f_loc); wo: (E, f_loc, D)."""
+    b, s, d = x.shape
+    num_experts = wi.shape[0]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ router.astype(jnp.float32))  # (T, E)
+    gates, top_idx = _route(logits, top_k, router_style)
+
+    # Aux losses (computed from the local shard; caller averages over shards).
+    probs = jax.nn.softmax(logits, axis=-1)
+    assign = jnp.zeros((t, num_experts), jnp.float32)
+    assign = assign.at[jnp.arange(t)[:, None], top_idx].add(1.0)
+    frac_tokens = assign.mean(axis=0) / top_k            # f_e
+    mean_probs = probs.mean(axis=0)                      # P_e
+    lb_loss = num_experts * jnp.sum(frac_tokens * mean_probs)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # --- dispatch ---------------------------------------------------------
+    tk = t * top_k
+    capacity = max(1, math.ceil(t * top_k / num_experts * capacity_factor))
+    flat_expert = top_idx.reshape(tk)                    # (TK,)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    flat_gate = gates.reshape(tk)
+
+    order = jnp.argsort(flat_expert)                     # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # rank of each entry within its expert's run
+    first_occurrence = jnp.searchsorted(
+        sorted_expert, sorted_expert, side="left", method="scan_unrolled"
+    )
+    rank = jnp.arange(tk) - first_occurrence
+    valid = rank < capacity
+    slot = jnp.where(valid, sorted_expert * capacity + rank, num_experts * capacity)
+
+    buf = jnp.zeros((num_experts * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].add(xf[sorted_token] * valid[:, None].astype(x.dtype))
+    xe = buf[:-1].reshape(num_experts, capacity, d)
+
+    # --- expert FFN (TP over d_ff, explicit psum) ---------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wi
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, wo)
+    if model_axis is not None:
+        ye = jax.lax.psum(ye, model_axis)
+
+    # --- combine -----------------------------------------------------------
+    ye_flat = jnp.concatenate(
+        [ye.reshape(num_experts * capacity, d), jnp.zeros((1, d), ye.dtype)]
+    )
+    y_tok = ye_flat[slot] * sorted_gate[:, None].astype(ye.dtype)
+    out = jnp.zeros((t, d), ye.dtype).at[sorted_token].add(y_tok)
+    return out.reshape(b, s, d).astype(x.dtype), lb_loss, z_loss
+
+
+def moe_block(
+    x: jax.Array,
+    params: dict,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    router_style: str = "topk_softmax",
+    mesh: jax.sharding.Mesh | None = None,
+    data_axes: tuple[str, ...] = (),
+    model_axis: str | None = None,
+    shard_dff: bool = True,
+) -> MoEOutput:
+    """Apply the MoE FFN. params: router (D,E), wi/wg (E,D,F), wo (E,F,D).
+
+    With ``mesh`` given, runs under shard_map: tokens local per data shard,
+    experts' d_ff sharded over ``model_axis`` (if divisible), explicit psum.
+    Without a mesh (CPU tests / single device) runs the same code directly.
+    """
+    if mesh is None:
+        y, lb, zl = _local_moe(
+            x, params["router"], params["wi"], params["wg"], params["wo"],
+            top_k=top_k, capacity_factor=capacity_factor,
+            router_style=router_style, model_axis=None,
+        )
+        return MoEOutput(y, lb, zl)
+
+    dff = params["wi"].shape[-1]
+    model_size = mesh.shape[model_axis] if model_axis else 1
+    use_model = bool(model_axis) and shard_dff and dff % model_size == 0
+    ff_spec = P(None, None, model_axis) if use_model else P(None, None, None)
+    ff_spec_out = P(None, model_axis, None) if use_model else P(None, None, None)
+    x_spec = P(data_axes if data_axes else None, None, None)
+
+    def fn(x, router, wi, wg, wo):
+        y, lb, zl = _local_moe(
+            x, router, wi, wg, wo,
+            top_k=top_k, capacity_factor=capacity_factor,
+            router_style=router_style,
+            model_axis=model_axis if use_model else None,
+        )
+        if data_axes:
+            lb = jax.lax.pmean(lb, data_axes)
+            zl = jax.lax.pmean(zl, data_axes)
+        return y, lb, zl
+
+    y, lb, zl = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), ff_spec, ff_spec, ff_spec_out),
+        out_specs=(x_spec, P(), P()),
+        check_vma=False,
+    )(x, params["router"], params["wi"], params["wg"], params["wo"])
+    return MoEOutput(y, lb, zl)

@@ -1,0 +1,101 @@
+"""Serving: batched decode step + prefill-into-buffer + simple generate loop."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, prefill
+from repro.models.transformer import ShardCtx, init_cache
+
+
+def cache_from_prefill(prefill_cache: dict, cfg: ModelConfig, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """Pad a prefill-produced cache into a max_len decode buffer."""
+    out = {}
+    if "kv" in prefill_cache:
+        k, v = prefill_cache["kv"]
+        pad = max_len - k.shape[2]
+        padding = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        out["kv"] = (
+            jnp.pad(k.astype(dtype), padding),
+            jnp.pad(v.astype(dtype), padding),
+        )
+    if "ssm" in prefill_cache:
+        out["ssm"] = prefill_cache["ssm"]
+    return out
+
+
+def serve_step(
+    params: dict,
+    cache: dict,
+    token: jax.Array,      # (B, 1) int32
+    pos: jax.Array,        # scalar int32
+    cfg: ModelConfig,
+    *,
+    ctx: ShardCtx = ShardCtx(),
+    encoder_out: Optional[jax.Array] = None,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+):
+    """One serving step: decode + greedy/temperature sampling.
+
+    Returns (next_token (B,1), logits (B,1,V), new_cache).
+    """
+    logits, new_cache = decode_step(
+        params, token, cache, pos, cfg, ctx=ctx, encoder_out=encoder_out
+    )
+    logits_f = logits.astype(jnp.float32)
+    if temperature > 0.0 and rng is not None:
+        next_token = jax.random.categorical(rng, logits_f / temperature, axis=-1)
+    else:
+        next_token = jnp.argmax(logits_f, axis=-1)
+    return next_token.astype(jnp.int32), logits, new_cache
+
+
+def generate(
+    params: dict,
+    prompt: jax.Array,      # (B, P) int32
+    cfg: ModelConfig,
+    *,
+    max_new_tokens: int = 32,
+    max_len: Optional[int] = None,
+    ctx: ShardCtx = ShardCtx(),
+    batch_extras: Optional[dict] = None,
+    temperature: float = 0.0,
+    seed: int = 0,
+):
+    """Prefill the prompt then decode greedily. Returns (B, new) tokens."""
+    bsz, plen = prompt.shape
+    max_len = max_len or plen + max_new_tokens
+    batch = {"tokens": prompt}
+    if batch_extras:
+        batch.update(batch_extras)
+    logits_p, _, pcache = prefill(params, batch, cfg, ctx=ctx)
+    cache = init_cache(cfg, bsz, max_len)
+    cache.update(cache_from_prefill(pcache, cfg, max_len))
+
+    encoder_out = None
+    if cfg.arch_type == "audio":
+        from repro.models.encdec import encode
+
+        encoder_out = encode(params["encoder"], batch["audio_frames"], cfg, ctx)
+
+    step = jax.jit(
+        functools.partial(serve_step, cfg=cfg, ctx=ctx, temperature=temperature),
+        static_argnames=(),
+    )
+    token = jnp.argmax(logits_p[:, -1:, :].astype(jnp.float32), axis=-1).astype(jnp.int32)
+    toks = [token]
+    rng = jax.random.PRNGKey(seed)
+    pos = plen + (cfg.vision_tokens or 0)
+    for i in range(max_new_tokens - 1):
+        rng, sub = jax.random.split(rng)
+        token, _, cache = step(
+            params, cache, token, jnp.int32(pos + i), encoder_out=encoder_out, rng=sub
+        )
+        toks.append(token)
+    return jnp.concatenate(toks, axis=1)

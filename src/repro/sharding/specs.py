@@ -1,0 +1,264 @@
+"""PartitionSpec rules for every parameter / input / cache tensor.
+
+Divisibility-aware Megatron-style tensor parallelism over the ``model`` mesh
+axis, batch over ``('pod','data')``:
+
+* embeddings vocab-parallel; lm_head column(vocab)-parallel
+* attention: column-parallel in-projections, row-parallel out-projection.
+  When head counts don't divide the model axis (GQA kv=8 < 16 on every dense
+  arch; phi4's 24 q-heads; hymba's 25) the projection is sharded on the
+  *head_dim-major* column order instead ('hd' layout, layers.split_heads) —
+  the reshape to (B,S,H,hd) then propagates the sharding to the hd factor
+  with zero collectives. If neither factor divides, the param is replicated.
+* MLP: column-parallel wi/wg, row-parallel wo; MoE experts likewise on d_ff
+  (expert-parallel routing is local per data shard, see models/moe.py)
+* Mamba2: column-parallel wz/wx/wdt + depthwise convs, row-parallel
+  out_proj; B/C projections (d_model x state) are small and replicated
+* norms / scalars replicated
+
+MuonBP blocks: ``block_specs_for`` derives each matrix's (r, c) block grid
+from these PartitionSpecs — the paper's "block = the shard on one device".
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.blocking import BlockSpec2D, block_spec_from_partition
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.transformer import ShardCtx, ssm_dims
+
+MODEL_AXIS = "model"
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes_for(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _divides(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+def attn_layouts(cfg: ModelConfig, model_size: int) -> tuple[Optional[str], Optional[str]]:
+    """(q_layout, kv_layout): 'head' | 'hd' | None (replicate)."""
+
+    def layout(heads: int) -> Optional[str]:
+        if model_size <= 1:
+            return "head"
+        if _divides(heads, model_size):
+            return "head"
+        if _divides(cfg.head_dim, model_size):
+            return "hd"
+        return None
+
+    return layout(cfg.num_heads), layout(cfg.num_kv_heads)
+
+
+def make_ctx(cfg: ModelConfig, mesh: Optional[Mesh], global_batch: Optional[int] = None) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx()
+    model_size = mesh_axis_sizes(mesh).get(MODEL_AXIS, 1)
+    ql, kvl = attn_layouts(cfg, model_size)
+    baxes = (
+        batch_axes_for(global_batch, mesh) if global_batch else data_axes_for(mesh)
+    )
+    return ShardCtx(
+        mesh=mesh,
+        data_axes=data_axes_for(mesh),
+        model_axis=MODEL_AXIS if MODEL_AXIS in mesh.axis_names else None,
+        q_layout=ql or "head",
+        kv_layout=kvl or "head",
+        batch_axes=baxes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _path_names(path) -> list[str]:
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params``."""
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get(MODEL_AXIS, 1)
+    ql, kvl = attn_layouts(cfg, m)
+    dims = ssm_dims(cfg) if cfg.arch_type in ("ssm", "hybrid") else None
+
+    def rep(leaf):
+        return P(*(None,) * leaf.ndim)
+
+    def col(leaf, ok=True):
+        """Shard the last dim over model (if divisible)."""
+        if not ok or not _divides(leaf.shape[-1], m):
+            return rep(leaf)
+        return P(*(None,) * (leaf.ndim - 1), MODEL_AXIS)
+
+    def row(leaf, ok=True):
+        """Shard the second-to-last dim over model (if divisible)."""
+        if not ok or not _divides(leaf.shape[-2], m):
+            return rep(leaf)
+        return P(*(None,) * (leaf.ndim - 2), MODEL_AXIS, None)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        group = names[-2] if len(names) >= 2 else ""
+
+        if name == "embed":
+            return P(MODEL_AXIS, None) if _divides(leaf.shape[0], m) else rep(leaf)
+        if name == "lm_head":
+            return col(leaf)
+        if "norm" in name or name in ("attn_scale", "ssm_scale"):
+            return rep(leaf)
+        if group in ("attn", "cross"):
+            if name in ("wq",):
+                return col(leaf, ql is not None)
+            if name in ("wk", "wv"):
+                return col(leaf, kvl is not None)
+            if name == "wo":
+                return row(leaf, ql is not None)
+        if group == "mlp":
+            if name in ("wi", "wg"):
+                return col(leaf)
+            if name == "wo":
+                return row(leaf)
+        if group == "moe":
+            if name == "router":
+                return rep(leaf)
+            if name in ("wi", "wg"):
+                return col(leaf)
+            if name == "wo":
+                return row(leaf)
+        if group == "ssm":
+            heads_ok = dims is not None and _divides(dims.num_heads, m)
+            inner_ok = dims is not None and _divides(dims.d_inner, m)
+            # Weights shard on d_inner whenever divisible — even when the
+            # head count doesn't divide (hymba: 50 heads vs model=16), in
+            # which case GSPMD re-gathers activations at the head reshape but
+            # parameter/optimizer memory stays sharded (see DESIGN.md).
+            if name in ("wz", "wx"):
+                return col(leaf, inner_ok)
+            if name in ("wb", "wc"):
+                return rep(leaf)
+            if name == "wdt":
+                return col(leaf, heads_ok)
+            if name in ("conv_x", "conv_x_bias", "gate_norm"):
+                return col(leaf, inner_ok)
+            if name in ("conv_b", "conv_b_bias", "conv_c", "conv_c_bias"):
+                return rep(leaf)
+            if name in ("A_log", "D", "dt_bias"):
+                return col(leaf, heads_ok)
+            if name == "out_proj":
+                return row(leaf, inner_ok)
+        return rep(leaf)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def block_specs_for(params, specs, mesh: Mesh):
+    """MuonBP block grid per param: blocks = model-parallel shards."""
+    sizes = mesh_axis_sizes(mesh)
+    return jax.tree.map(
+        lambda p, s: block_spec_from_partition(s, p.shape, sizes), params, specs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_axes_for(global_batch: int, mesh: Mesh) -> tuple[str, ...]:
+    """Largest prefix of the data axes that divides the batch."""
+    axes: list[str] = []
+    sizes = mesh_axis_sizes(mesh)
+    prod = 1
+    for a in data_axes_for(mesh):
+        if global_batch % (prod * sizes[a]) == 0:
+            axes.append(a)
+            prod *= sizes[a]
+    return tuple(axes)
+
+
+def input_batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> dict:
+    """PartitionSpecs for the input batch dict (see launch.dryrun.input_specs)."""
+    baxes = batch_axes_for(shape.global_batch, mesh)
+    b = baxes if baxes else None
+    specs = {"tokens": P(b, None)}
+    if shape.kind == "train":
+        specs["labels"] = P(b, None)
+    if cfg.arch_type == "vlm":
+        specs["vision_embeds"] = P(b, None, None)
+    if cfg.arch_type == "audio":
+        specs["audio_frames"] = P(b, None, None)
+    if shape.kind == "decode":
+        specs["tokens"] = P(b, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                kv_seq_shard: bool = False, cache_len: int | None = None):
+    """Specs for the decode cache pytree from transformer.init_cache.
+
+    ``kv_seq_shard``: shard the cache *sequence* dim over the model axis
+    instead of heads/head_dim. Roofline-driven optimization (EXPERIMENTS.md
+    §Perf): with GQA head counts that don't divide the model axis, the
+    baseline head/hd sharding forces GSPMD to all-gather K/V per layer per
+    decode step (~2 GB/layer at 32k); sequence sharding reduces attention
+    over the sharded dim, needing only KB-scale softmax/psum collectives.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get(MODEL_AXIS, 1)
+    baxes = batch_axes_for(shape.global_batch, mesh)
+    b = baxes if baxes else None
+    eff_len = cache_len or shape.seq_len
+    # long-context batch=1: shard the cache sequence dim over the data axes
+    seq_axes = None
+    if not baxes:
+        data = data_axes_for(mesh)
+        prod = int(np.prod([sizes[a] for a in data])) if data else 1
+        if data and eff_len % prod == 0:
+            seq_axes = data
+
+    specs = {}
+    if cfg.num_heads and cfg.arch_type != "ssm":
+        _, kvl = attn_layouts(cfg, m)
+        if kv_seq_shard and seq_axes is None and eff_len % m == 0:
+            kv = P(None, b, MODEL_AXIS, None, None)
+        elif kvl == "head":
+            kv = P(None, b, seq_axes, MODEL_AXIS, None)
+        elif kvl == "hd":
+            kv = P(None, b, seq_axes, None, MODEL_AXIS)
+        else:
+            kv = P(None, b, seq_axes, None, None)
+        specs["kv"] = (kv, kv)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        dims = ssm_dims(cfg)
+        heads_ok = _divides(dims.num_heads, m)
+        h_axis = MODEL_AXIS if heads_ok else None
+        inner_axis = MODEL_AXIS if heads_ok and _divides(dims.d_inner, m) else None
+        specs["ssm"] = {
+            "h": P(None, b, h_axis, None, None),
+            "conv_x": P(None, b, None, inner_axis),
+            "conv_b": P(None, b, None, None),
+            "conv_c": P(None, b, None, None),
+        }
+    return specs
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,65 @@
+"""Checkpointing: flat-path .npz snapshots of params + optimizer state.
+
+Host-side (device_get) save with sharding-agnostic restore: on load, arrays
+are device_put with whatever shardings the caller provides, so a checkpoint
+written on one mesh restores onto another (or onto CPU).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree.flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(path: str, params: Any, opt_state: Any = None, step: int = 0, extra: Optional[dict] = None):
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    meta = {"step": int(step)}
+    if extra:
+        meta.update(extra)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def _unflatten_into(template, flat: dict[str, np.ndarray], shardings=None):
+    leaves_with_path, treedef = jax.tree.flatten_with_path(template)
+    shard_leaves = (
+        jax.tree.flatten(shardings)[0] if shardings is not None else [None] * len(leaves_with_path)
+    )
+    new_leaves = []
+    for (path, leaf), shd in zip(leaves_with_path, shard_leaves):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"checkpoint shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        new_leaves.append(jax.device_put(arr, shd) if shd is not None else jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def restore(path: str, params_template: Any, opt_template: Any = None, shardings=None, opt_shardings=None):
+    """Returns (params, opt_state or None, step)."""
+    flat_p = dict(np.load(os.path.join(path, "params.npz")))
+    params = _unflatten_into(params_template, flat_p, shardings)
+    opt_state = None
+    opt_file = os.path.join(path, "opt_state.npz")
+    if opt_template is not None and os.path.exists(opt_file):
+        flat_o = dict(np.load(opt_file))
+        opt_state = _unflatten_into(opt_template, flat_o, opt_shardings)
+    with open(os.path.join(path, "meta.json")) as f:
+        step = json.load(f)["step"]
+    return params, opt_state, step

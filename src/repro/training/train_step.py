@@ -1,0 +1,137 @@
+"""Training step: mixed-precision loss/grad + optimizer apply.
+
+Paper setup: bf16 compute with fp32 master weights (Sec 4.2). Params live in
+fp32; the forward/backward runs on a bf16 cast; gradients and optimizer
+state are fp32.
+
+The MuonBP phase ('block' | 'full') is a *static* argument — the launcher
+compiles the step once per phase and alternates per ``step % P``
+(core/muon.py explains why this beats a lax.cond).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.combine import apply_updates
+from repro.core.muon import Optimizer
+from repro.models.model import loss_fn
+from repro.models.transformer import ShardCtx
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def train_step(
+    state: TrainState,
+    batch: dict,
+    *,
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    ctx: ShardCtx = ShardCtx(),
+    phase: str = "block",
+    compute_dtype=jnp.bfloat16,
+    accum_steps: int = 1,
+    bf16_grads: bool = False,
+):
+    """One optimization step. Returns (new_state, metrics).
+
+    ``accum_steps > 1`` splits the batch into microbatches and accumulates
+    gradients with lax.scan — activation memory drops ~accum_steps x at the
+    cost of accum_steps sequential passes (same total FLOPs).
+
+    ``bf16_grads``: differentiate w.r.t. the bf16-cast params so the
+    cross-data-replica gradient all-reduce moves bf16 instead of fp32
+    (half the bytes; the optimizer still accumulates in fp32). Standard
+    mixed-precision trade-off; see EXPERIMENTS.md §Perf.
+    """
+
+    if bf16_grads:
+        def lf(p, b):
+            return loss_fn(p, b, cfg, ctx=ctx)
+
+        def grad_fn(p, b):
+            pc = cast_tree(p, compute_dtype)
+            (l, m), g = jax.value_and_grad(lf, has_aux=True)(pc, b)
+            return (l, m), g
+    else:
+        def lf(p, b):
+            return loss_fn(cast_tree(p, compute_dtype), b, cfg, ctx=ctx)
+
+        def grad_fn(p, b):
+            return jax.value_and_grad(lf, has_aux=True)(p, b)
+
+    if accum_steps > 1:
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+        microbatches = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            (l, m), g = grad_fn(state.params, mb)
+            acc = jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32) / accum_steps, acc, g)
+            return acc, (l, m)
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+        )
+        from repro.models.layers import scan_unroll
+
+        grads, (losses, ms) = jax.lax.scan(
+            body, zeros, microbatches, unroll=True if scan_unroll() else 1
+        )
+        loss = losses.mean()
+        metrics = jax.tree.map(lambda x: x.mean(), ms)
+    else:
+        (loss, metrics), grads = grad_fn(state.params, batch)
+    updates, new_opt_state = optimizer.update(
+        grads, state.opt_state, state.params, phase
+    )
+    new_params = apply_updates(state.params, updates)
+    metrics = dict(metrics)
+    metrics["grad_norm"] = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    return TrainState(new_params, new_opt_state, state.step + 1), metrics
+
+
+def make_train_step_fns(cfg, optimizer, ctx, donate=True, compute_dtype=jnp.bfloat16,
+                        accum_steps: int = 1):
+    """Returns {'block': jitted fn, 'full': jitted fn} over (state, batch)."""
+    fns = {}
+    for phase in ("block", "full"):
+        step = functools.partial(
+            train_step,
+            cfg=cfg,
+            optimizer=optimizer,
+            ctx=ctx,
+            phase=phase,
+            compute_dtype=compute_dtype,
+            accum_steps=accum_steps,
+        )
+        fns[phase] = jax.jit(step, donate_argnums=(0,) if donate else ())
+    return fns

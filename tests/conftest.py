@@ -1,0 +1,41 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real (single) CPU device; only launch/dryrun.py forces 512."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_cfg(name: str, **overrides):
+    """Reduced config for CPU tests (2 layers, d_model<=256)."""
+    from repro.configs import get_config
+
+    cfg = get_config(name).reduced()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def make_batch(cfg, batch=2, seq=32, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], -jnp.ones((batch, 1), jnp.int32)], axis=1
+    )
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.arch_type == "vlm":
+        out["vision_embeds"] = 0.1 * jax.random.normal(
+            key, (batch, cfg.vision_tokens, cfg.d_model)
+        )
+    if cfg.arch_type == "audio":
+        out["audio_frames"] = 0.1 * jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model)
+        )
+    return out

@@ -1,0 +1,61 @@
+"""Block partitioning: property tests (hypothesis) + spec derivation."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.blocking import (
+    BlockSpec2D,
+    block_spec_from_partition,
+    partition_blocks,
+    unpartition_blocks,
+)
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(
+    r=st.integers(1, 4),
+    c=st.integers(1, 4),
+    mb=st.integers(1, 8),
+    nb=st.integers(1, 8),
+    lead=st.integers(0, 2),
+    seed=st.integers(0, 999),
+)
+def test_partition_roundtrip(r, c, mb, nb, lead, seed):
+    shape = (3,) * lead + (r * mb, c * nb)
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    bs = BlockSpec2D(r, c)
+    blocks = partition_blocks(x, bs)
+    assert blocks.shape == (3,) * lead + (r * c, mb, nb)
+    np.testing.assert_array_equal(np.asarray(unpartition_blocks(blocks, bs)), np.asarray(x))
+
+
+def test_blocks_are_contiguous_submatrices():
+    x = jnp.arange(16).reshape(4, 4)
+    blocks = partition_blocks(x, BlockSpec2D(2, 2))
+    np.testing.assert_array_equal(np.asarray(blocks[0]), [[0, 1], [4, 5]])
+    np.testing.assert_array_equal(np.asarray(blocks[1]), [[2, 3], [6, 7]])
+    np.testing.assert_array_equal(np.asarray(blocks[2]), [[8, 9], [12, 13]])
+
+
+def test_spec_from_partition():
+    sizes = {"data": 4, "model": 8}
+    assert block_spec_from_partition(P(None, "model"), (16, 64), sizes) == BlockSpec2D(1, 8)
+    assert block_spec_from_partition(P("model", None), (64, 16), sizes) == BlockSpec2D(8, 1)
+    assert block_spec_from_partition(P(None, None, "model"), (2, 16, 64), sizes) == BlockSpec2D(1, 8)
+    # tuple axes multiply
+    assert block_spec_from_partition(P(("data", "model"), None), (32, 4), sizes) == BlockSpec2D(32, 1)
+    # non-divisible dims degrade to 1 (replicated-safe)
+    assert block_spec_from_partition(P(None, "model"), (16, 20), sizes) == BlockSpec2D(1, 1)
+    assert block_spec_from_partition(None, (16, 16), sizes) == BlockSpec2D(1, 1)
+    assert block_spec_from_partition(P("model"), (16,), sizes) == BlockSpec2D(1, 1)
+
+
+def test_blockspec_is_tree_leaf():
+    """BlockSpec2D must survive jax.tree.map as a leaf (regression test)."""
+    tree = {"a": BlockSpec2D(2, 4)}
+    out = jax.tree.map(lambda l, b: b, {"a": "x"}, tree)
+    assert out["a"] == BlockSpec2D(2, 4)

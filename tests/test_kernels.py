@@ -1,0 +1,88 @@
+"""Pallas Newton-Schulz kernels vs the pure-jnp oracle (interpret mode).
+
+Per the assignment: sweep shapes/dtypes and assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.newton_schulz import PAPER_COEFFS, orthogonalize as orth_core
+from repro.kernels.newton_schulz import ref
+from repro.kernels.newton_schulz.newton_schulz import fma_matmul, matmul
+from repro.kernels.newton_schulz.ops import ns_iteration, orthogonalize
+
+SHAPES = [
+    (128, 128, 128),   # single tile
+    (256, 512, 384),   # multi-tile all dims
+    (100, 300, 50),    # ragged (exercises padding)
+    (64, 1000, 8),     # skinny
+    (1, 128, 1),       # degenerate
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return dict(rtol=3e-2, atol=3e-2) if dt == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matmul_matches_ref(m, k, n, dtype):
+    kx, ky = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+    x = jax.random.normal(kx, (m, k), dtype)
+    y = jax.random.normal(ky, (k, n), dtype)
+    out = matmul(x, y, interpret=True)
+    expect = ref.matmul_ref(x, y)
+    assert out.dtype == dtype and out.shape == (m, n)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:3])
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("alpha,beta", [(2.0, -1.5), (0.5, 1.0)])
+def test_fma_matmul_matches_ref(m, k, n, dtype, alpha, beta):
+    kx, ky, kc = jax.random.split(jax.random.PRNGKey(n), 3)
+    x = jax.random.normal(kx, (m, k), dtype)
+    y = jax.random.normal(ky, (k, n), dtype)
+    c = jax.random.normal(kc, (m, n), dtype)
+    out = fma_matmul(x, y, c, alpha=alpha, beta=beta, interpret=True)
+    expect = ref.fma_matmul_ref(x, y, c, alpha, beta)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", [(64, 64), (48, 112), (200, 72)])
+def test_ns_iteration_matches_ref(shape):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    x = x / jnp.linalg.norm(x)
+    out = ns_iteration(x, PAPER_COEFFS, interpret=True)
+    expect = ref.ns_iteration_ref(x, PAPER_COEFFS)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (128, 64), (96, 96)])
+@pytest.mark.parametrize("steps", [1, 5])
+def test_orthogonalize_matches_core_and_ref(shape, steps):
+    g = jax.random.normal(jax.random.PRNGKey(2), shape)
+    out = orthogonalize(g, steps=steps, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(orth_core(g, steps=steps)), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.newton_schulz_ref(g, steps, PAPER_COEFFS)), atol=1e-5
+    )
+
+
+def test_custom_block_shapes():
+    x = jax.random.normal(jax.random.PRNGKey(3), (256, 256))
+    y = jax.random.normal(jax.random.PRNGKey(4), (256, 256))
+    for bm, bn, bk in [(64, 64, 64), (128, 256, 128)]:
+        out = matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul_ref(x, y)), rtol=1e-4, atol=1e-3
+        )

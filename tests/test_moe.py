@@ -1,0 +1,99 @@
+"""MoE routing: correctness vs a dense oracle + aux-loss properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import MoEOutput, _local_moe, _route, moe_block
+
+
+def _params(key, e=4, d=16, f=32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": 0.1 * jax.random.normal(k1, (d, e)),
+        "wi": 0.1 * jax.random.normal(k2, (e, d, f)),
+        "wg": 0.1 * jax.random.normal(k3, (e, d, f)),
+        "wo": 0.1 * jax.random.normal(k4, (e, f, d)),
+    }
+
+
+def _dense_oracle(x, params, top_k, router_style):
+    """All-experts dense computation weighted by the routing gates."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = xf @ params["router"]
+    gates, idx = _route(logits, top_k, router_style)
+    # per-expert outputs for every token
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, params["wg"])) * jnp.einsum(
+        "td,edf->tef", xf, params["wi"]
+    )
+    y_all = jnp.einsum("tef,efd->ted", h, params["wo"])  # (T, E, D)
+    weights = jnp.zeros((t, params["wi"].shape[0]))
+    weights = weights.at[jnp.arange(t)[:, None], idx].add(gates)
+    return jnp.einsum("te,ted->td", weights, y_all).reshape(b, s, d)
+
+
+@pytest.mark.parametrize("router_style", ["topk_softmax", "softmax_topk"])
+def test_dropless_matches_dense_oracle(key, router_style):
+    x = jax.random.normal(key, (2, 8, 16))
+    params = _params(key)
+    y, lb, zl = _local_moe(
+        x, params["router"], params["wi"], params["wg"], params["wo"],
+        top_k=2, capacity_factor=100.0, router_style=router_style, model_axis=None,
+    )
+    expect = _dense_oracle(x, params, 2, router_style)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=1e-5)
+
+
+def test_capacity_drops_tokens(key):
+    """With capacity 0+ the output is damped but finite (dropped tokens)."""
+    x = jax.random.normal(key, (2, 16, 16))
+    params = _params(key)
+    y_full, *_ = _local_moe(
+        x, params["router"], params["wi"], params["wg"], params["wo"],
+        top_k=2, capacity_factor=100.0, router_style="topk_softmax", model_axis=None,
+    )
+    y_tight, *_ = _local_moe(
+        x, params["router"], params["wi"], params["wg"], params["wo"],
+        top_k=2, capacity_factor=0.25, router_style="topk_softmax", model_axis=None,
+    )
+    assert float(jnp.linalg.norm(y_tight)) < float(jnp.linalg.norm(y_full))
+    assert bool(jnp.all(jnp.isfinite(y_tight)))
+
+
+def test_load_balance_loss_uniform_is_one(key):
+    """Uniform routing gives LB loss ~= 1 (Switch normalization)."""
+    x = jax.random.normal(key, (4, 32, 16))
+    params = _params(key, e=4)
+    params["router"] = jnp.zeros_like(params["router"])  # uniform logits
+    _, lb, _ = _local_moe(
+        x, params["router"], params["wi"], params["wg"], params["wo"],
+        top_k=1, capacity_factor=100.0, router_style="softmax_topk", model_axis=None,
+    )
+    # ties in top_k pick expert 0 -> f_e concentrated; use random router for
+    # the uniform-probs part instead: P_e uniform => lb = E * sum(f_e * 1/E) = 1
+    np.testing.assert_allclose(float(lb), 1.0, atol=1e-5)
+
+
+def test_moe_block_no_mesh_wrapper(key):
+    x = jax.random.normal(key, (2, 8, 16))
+    out = moe_block(x, _params(key), top_k=2, capacity_factor=2.0)
+    assert isinstance(out, MoEOutput)
+    assert out.y.shape == x.shape
+    assert bool(jnp.isfinite(out.load_balance_loss))
+
+
+def test_gradients_flow_through_routing(key):
+    x = jax.random.normal(key, (2, 8, 16))
+    params = _params(key)
+
+    def loss(p):
+        out = moe_block(x, p, top_k=2, capacity_factor=2.0)
+        return jnp.sum(out.y**2) + 0.01 * out.load_balance_loss
+
+    grads = jax.grad(loss)(params)
+    for name, g in grads.items():
+        assert bool(jnp.any(g != 0)), f"zero grad for {name}"
+        assert bool(jnp.all(jnp.isfinite(g))), name

@@ -1,0 +1,93 @@
+"""Newton-Schulz orthogonalization: unit + property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.newton_schulz import (
+    JORDAN_COEFFS,
+    PAPER_COEFFS,
+    orthogonalize,
+    orthogonality_error,
+)
+
+
+def test_orthogonalizes_wide_matrix(key):
+    g = jax.random.normal(key, (64, 128))
+    o = orthogonalize(g, steps=12)
+    sv = jnp.linalg.svd(o.astype(jnp.float32), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(sv), 1.0, atol=0.05)
+
+
+def test_orthogonalizes_tall_matrix(key):
+    g = jax.random.normal(key, (128, 48))
+    o = orthogonalize(g, steps=12)
+    sv = jnp.linalg.svd(o.astype(jnp.float32), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(sv), 1.0, atol=0.05)
+
+
+def test_error_decreases_with_steps(key):
+    g = jax.random.normal(key, (64, 96))
+    errs = [float(orthogonality_error(orthogonalize(g, steps=s))) for s in (1, 3, 6, 10)]
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_batched_matches_loop(key):
+    g = jax.random.normal(key, (4, 32, 64))
+    batched = orthogonalize(g, steps=5)
+    looped = jnp.stack([orthogonalize(g[i], steps=5) for i in range(4)])
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(looped), atol=1e-6)
+
+
+def test_preserves_sign_direction(key):
+    # Orth(G) should positively correlate with G (it is (GG^T)^-1/2 G).
+    g = jax.random.normal(key, (32, 32))
+    o = orthogonalize(g, steps=8)
+    assert float(jnp.sum(o * g)) > 0
+
+
+def test_jordan_coeffs_run(key):
+    g = jax.random.normal(key, (64, 64))
+    o = orthogonalize(g, steps=5, coeffs=JORDAN_COEFFS)
+    # quintic coeffs trade exactness for speed; loose bound
+    assert float(orthogonality_error(o)) < 0.5
+
+
+def test_bf16_input_roundtrip(key):
+    g = jax.random.normal(key, (64, 64), jnp.bfloat16)
+    o = orthogonalize(g, steps=5)
+    assert o.dtype == jnp.bfloat16
+    assert not bool(jnp.any(jnp.isnan(o.astype(jnp.float32))))
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(
+    m=st.integers(4, 48),
+    n=st.integers(4, 48),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scale_invariance(m, n, scale, seed):
+    """Orth(c G) == Orth(G): the fro-normalization makes NS scale-free."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    o1 = orthogonalize(g, steps=5)
+    o2 = orthogonalize(g * scale, steps=5)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+
+
+@hypothesis.settings(deadline=None, max_examples=15)
+@hypothesis.given(m=st.integers(8, 40), n=st.integers(8, 40), seed=st.integers(0, 1000))
+def test_singular_values_bounded(m, n, seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    o = orthogonalize(g, steps=10)
+    sv = jnp.linalg.svd(o.astype(jnp.float32), compute_uv=False)
+    assert float(sv.max()) < 1.3
+    assert not bool(jnp.any(jnp.isnan(o)))
+
+
+def test_zero_matrix_safe():
+    o = orthogonalize(jnp.zeros((16, 16)), steps=5)
+    assert not bool(jnp.any(jnp.isnan(o)))

@@ -1,0 +1,98 @@
+"""AdamW, Dion, schedules: unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adamw, dion
+from repro.core.schedule import cosine, constant, wsd
+
+
+def test_adamw_first_step_math(key):
+    p = jax.random.normal(key, (4, 4))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (4, 4))
+    opt = adamw(0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0, grad_clip=None)
+    state = opt.init({"w": p})
+    upd, _ = opt.update({"w": g}, state, {"w": p})
+    # bias-corrected first step = -lr * g / (|g| + eps)
+    expect = -0.1 * g / (jnp.abs(g) + 1e-8)
+    np.testing.assert_allclose(np.asarray(upd["w"]), np.asarray(expect), rtol=1e-4)
+
+
+def test_adamw_weight_decay_decoupled(key):
+    p = jnp.ones((4,))
+    opt = adamw(0.1, weight_decay=0.5, grad_clip=None)
+    state = opt.init({"w": p})
+    upd, _ = opt.update({"w": jnp.zeros((4,))}, state, {"w": p})
+    np.testing.assert_allclose(np.asarray(upd["w"]), -0.05 * np.ones(4), atol=1e-7)
+
+
+def test_adamw_grad_clip(key):
+    g = 1000.0 * jnp.ones((4,))
+    opt = adamw(0.1, grad_clip=1.0)
+    state = opt.init({"w": jnp.zeros((4,))})
+    _, new_state = opt.update({"w": g}, state, {"w": jnp.zeros((4,))})
+    # clipped global norm = 1 -> mu = 0.1 * g_clipped
+    assert float(jnp.linalg.norm(new_state.mu["w"] / 0.1)) <= 1.01
+
+
+def test_adamw_minimizes_quadratic(key):
+    target = jax.random.normal(key, (8,))
+    w = jnp.zeros((8,))
+    opt = adamw(0.1)
+    state = opt.init({"w": w})
+    for _ in range(200):
+        g = w - target
+        upd, state = opt.update({"w": g}, state, {"w": w})
+        w = w + upd["w"]
+    assert float(jnp.linalg.norm(w - target)) < 0.05
+
+
+def test_dion_update_is_low_rank(key):
+    p = jax.random.normal(key, (32, 48))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (32, 48))
+    opt = dion(0.1, rank=4)
+    state = opt.init({"w": p})
+    upd, new_state = opt.update({"w": g}, state, {"w": p})
+    rank = int(jnp.linalg.matrix_rank(upd["w"].astype(jnp.float32), tol=1e-4))
+    assert rank <= 4
+    # basis columns stay unit-norm
+    norms = jnp.linalg.norm(new_state.basis["w"], axis=0)
+    np.testing.assert_allclose(np.asarray(norms), 1.0, atol=1e-4)
+
+
+def test_dion_minimizes_quadratic(key):
+    target = jax.random.normal(key, (16, 16))
+    w = jnp.zeros((16, 16))
+    opt = dion(0.02, rank=16, momentum=0.9)
+    state = opt.init({"w": w})
+    losses = []
+    for _ in range(200):
+        g = w - target
+        upd, state = opt.update({"w": g}, state, {"w": w})
+        w = w + upd["w"]
+        losses.append(float(0.5 * jnp.sum((w - target) ** 2)))
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_wsd_schedule():
+    s = wsd(1.0, 100, warmup_steps=10, decay_frac=0.2)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert float(s(jnp.int32(10))) == 1.0
+    assert float(s(jnp.int32(50))) == 1.0
+    assert float(s(jnp.int32(79))) == 1.0
+    assert 0.0 < float(s(jnp.int32(90))) < 1.0
+    np.testing.assert_allclose(float(s(jnp.int32(100))), 0.0, atol=1e-6)
+
+
+def test_cosine_schedule():
+    s = cosine(2.0, 100)
+    np.testing.assert_allclose(float(s(jnp.int32(0))), 2.0, atol=1e-6)
+    np.testing.assert_allclose(float(s(jnp.int32(100))), 0.0, atol=1e-6)
+    assert 0.9 < float(s(jnp.int32(50))) < 1.1
+
+
+def test_constant_schedule():
+    s = constant(0.5)
+    assert float(s(jnp.int32(7))) == 0.5

@@ -1,0 +1,115 @@
+"""Sharding specs: divisibility, coverage, block derivation, layouts."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.core.blocking import BlockSpec2D
+from repro.models.model import init_params
+from repro.sharding import specs as sh
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Abstract mesh: spec logic only needs axis names/sizes."""
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+MESH = fake_mesh()
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divisible(arch, key):
+    """Every sharded dim must be divisible by its mesh axes product."""
+    cfg = get_config(arch)
+    a_params = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    specs = sh.param_specs(a_params, cfg, MESH)
+    sizes = sh.mesh_axis_sizes(MESH)
+
+    def check(path, leaf, spec):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for dim, entry in zip(leaf.shape, entries):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            prod = int(np.prod([sizes[n] for n in names]))
+            assert dim % prod == 0, (path, leaf.shape, spec)
+
+    for (path, leaf), (_, spec) in zip(
+        jax.tree.flatten_with_path(a_params)[0],
+        jax.tree.flatten_with_path(specs, is_leaf=lambda x: isinstance(x, P))[0],
+    ):
+        check(path, leaf, spec)
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "mixtral-8x7b", "mamba2-1.3b"])
+def test_big_matrices_are_sharded(arch, key):
+    """The flagship matrices must not silently end up replicated."""
+    cfg = get_config(arch)
+    a_params = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    specs = sh.param_specs(a_params, cfg, MESH)
+    flat = {
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path): spec
+        for path, spec in jax.tree.flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )[0]
+    }
+    if cfg.arch_type == "ssm":
+        assert flat["layers/ssm/wx"] == P(None, None, "model")
+        assert flat["layers/ssm/out_proj"] == P(None, "model", None)
+    else:
+        assert flat["layers/mlp/wi" if cfg.arch_type == "dense" else "layers/moe/wi"] is not None
+        assert "model" in str(flat["embed"])
+        assert flat["layers/attn/wq"] == P(None, None, "model")
+
+
+def test_attn_layouts():
+    # granite: 32 q heads /16 -> head; kv=8 -> hd (head_dim 128 % 16 == 0)
+    assert sh.attn_layouts(get_config("granite-8b"), 16) == ("head", "hd")
+    # phi4: 24 heads not divisible, head_dim 128 -> hd for both
+    assert sh.attn_layouts(get_config("phi4-mini-3.8b"), 16) == ("hd", "hd")
+    # olmoe: 16/16 both
+    assert sh.attn_layouts(get_config("olmoe-1b-7b"), 16) == ("head", "head")
+    # single device: always head
+    assert sh.attn_layouts(get_config("granite-8b"), 1) == ("head", "head")
+
+
+def test_block_specs_follow_sharding(key):
+    cfg = get_config("granite-8b")
+    a_params = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    specs = sh.param_specs(a_params, cfg, MESH)
+    bspecs = sh.block_specs_for(a_params, specs, MESH)
+    assert bspecs["layers"]["mlp"]["wi"] == BlockSpec2D(1, 16)   # col-parallel
+    assert bspecs["layers"]["mlp"]["wo"] == BlockSpec2D(16, 1)   # row-parallel
+    assert bspecs["embed"] == BlockSpec2D(16, 1)
+    assert bspecs["final_norm"] == BlockSpec2D(1, 1)
+
+
+def test_batch_axes_for_shapes():
+    assert sh.batch_axes_for(256, MESH) == ("data",)
+    assert sh.batch_axes_for(1, MESH) == ()
+    mp = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert sh.batch_axes_for(256, mp) == ("pod", "data")
+    assert sh.batch_axes_for(2, mp) == ("pod",)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_structure(arch, shape_name):
+    from repro.configs import shape_applies
+    from repro.models.transformer import init_cache
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applies(cfg, shape):
+        pytest.skip("long_500k skip per DESIGN.md")
+    a_cache = jax.eval_shape(lambda: init_cache(cfg, shape.global_batch, 1024))
+    cspecs = sh.cache_specs(cfg, shape, MESH)
+    # structure must match
+    jax.tree.map(lambda x, s: None, a_cache, cspecs,
+                 is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+    if shape_name == "long_500k" and "kv" in cspecs:
+        # batch=1: cache sequence dim sharded over data
+        assert cspecs["kv"][0][2] in ("data", ("data",))
