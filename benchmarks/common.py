@@ -20,5 +20,9 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def row(name: str, us: float, derived: str) -> str:
-    return f"{name},{us:.1f},{derived}"
+def row(
+    name: str, us: float, derived: str, backend: str = "-", bucketing: str = "-"
+) -> str:
+    """CSV row; ``backend``/``bucketing`` identify the NS engine variant
+    measured ("jnp"/"pallas", "on"/"off") — "-" where not applicable."""
+    return f"{name},{us:.1f},{derived},{backend},{bucketing}"

@@ -1,11 +1,17 @@
 """Paper Sec 2.2 / Sec 3: Newton-Schulz computational cost.
 
 1. Times one NS iteration for representative matrix shapes (full vs 8-way
-   blocked) and reports achieved GFLOP/s.
+   blocked) and reports achieved GFLOP/s, per NS backend (jnp vs pallas).
 2. Reproduces the paper's analytic claim: for Llama-3-405B MLP matrices
    (m, n in {53248, 16384}) with 8-way TP, block orthogonalization is
    ~2.36x (up-projection) / ~9.06x (down-projection) cheaper per NS step
    than full orthogonalization.
+3. Measures the bucketed-dispatch effect at the NS level: one batched
+   chain over a stack vs a per-matrix dispatch loop (bucketing on/off).
+
+The pallas backend runs in interpret mode on CPU, so its absolute timing
+is a correctness artifact, not a perf number; the jnp rows are the
+meaningful CPU timings, and the backend column keys the A/B.
 """
 
 from __future__ import annotations
@@ -47,17 +53,55 @@ def run(quick: bool = False) -> list[str]:
     shapes = [(512, 2048)] if quick else [(512, 2048), (1024, 4096)]
     for m, n in shapes:
         g = jax.random.normal(jax.random.PRNGKey(0), (m, n), jnp.float32)
-        us_full = timeit(lambda x: orthogonalize(x, steps=5), g)
+        us_full = timeit(lambda x: orthogonalize(x, steps=5, backend="jnp"), g)
         gflops = 5 * ns_step_flops(m, n) / (us_full * 1e-6) / 1e9
-        rows.append(row(f"ns_full_{m}x{n}_5steps", us_full, f"{gflops:.1f}GFLOP/s"))
+        rows.append(
+            row(f"ns_full_{m}x{n}_5steps", us_full, f"{gflops:.1f}GFLOP/s",
+                backend="jnp")
+        )
 
         bs = BlockSpec2D(1, 8)
         blocks = partition_blocks(g, bs)
-        us_block = timeit(lambda x: orthogonalize(x, steps=5), blocks)
+        us_block = timeit(lambda x: orthogonalize(x, steps=5, backend="jnp"), blocks)
         rows.append(
             row(
                 f"ns_block8_{m}x{n}_5steps", us_block,
-                f"speedup_x{us_full / us_block:.2f}",
+                f"speedup_x{us_full / us_block:.2f}", backend="jnp",
             )
         )
+
+    # ---- bucketed dispatch at the NS level: one batched chain vs a loop ---
+    stack, bm, bn = (8, 128, 512) if quick else (16, 256, 1024)
+    gs = jax.random.normal(jax.random.PRNGKey(1), (stack, bm, bn), jnp.float32)
+    us_stacked = timeit(lambda x: orthogonalize(x, steps=5, backend="jnp"), gs)
+    rows.append(
+        row(f"ns_stack{stack}_{bm}x{bn}_5steps", us_stacked,
+            "one_batched_dispatch", backend="jnp", bucketing="on")
+    )
+
+    def per_matrix_loop(x):
+        return jnp.stack([orthogonalize(x[i], steps=5, backend="jnp") for i in range(stack)])
+
+    us_loop = timeit(per_matrix_loop, gs)
+    rows.append(
+        row(f"ns_loop{stack}_{bm}x{bn}_5steps", us_loop,
+            f"speedup_x{us_loop / us_stacked:.2f}_from_bucketing",
+            backend="jnp", bucketing="off")
+    )
+
+    # ---- pallas backend (interpret mode on CPU: correctness A/B only) -----
+    gp = jax.random.normal(jax.random.PRNGKey(2), (4, 64, 128), jnp.float32)
+    us_pallas = timeit(
+        lambda x: orthogonalize(x, steps=5, backend="pallas"), gp,
+        warmup=1, iters=2,
+    )
+    us_jnp_small = timeit(lambda x: orthogonalize(x, steps=5, backend="jnp"), gp)
+    rows.append(
+        row("ns_fused_stack4_64x128_5steps", us_pallas,
+            "interpret_mode_correctness_only", backend="pallas", bucketing="on")
+    )
+    rows.append(
+        row("ns_fused_ref_stack4_64x128_5steps", us_jnp_small,
+            "jnp_same_shape_reference", backend="jnp", bucketing="on")
+    )
     return rows

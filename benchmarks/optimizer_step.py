@@ -1,8 +1,12 @@
 """Optimizer-step microbenchmark (paper Sec 2.2 'Computational costs').
 
 Times a full optimizer update over a realistic param set for AdamW / Muon /
-BlockMuon / MuonBP / Dion, plus the Pallas NS kernel (interpret mode on CPU
-— correctness path; the jnp timing is the meaningful CPU number)."""
+BlockMuon / MuonBP / Dion. The Muon-family rows are measured twice — with
+the shape-bucketed batched NS engine (bucketing=on, the default: one NS
+chain per distinct unit shape) and with per-leaf dispatch (bucketing=off) —
+so the engine win shows up as a column-wise A/B on identical numerics. The
+backend column records the NS execution backend (jnp on CPU; the pallas
+interpret path is a correctness artifact benchmarked in ns_cost)."""
 
 from __future__ import annotations
 
@@ -29,23 +33,39 @@ def run(quick: bool = False) -> list[str]:
 
     rows = []
     n_params = sum(int(p.size) for p in jax.tree.leaves(params))
-    for name, matrix_opt, phase in [
-        ("adamw", None, "block"),
-        ("muon_full", muon_full(1e-3), "full"),
-        ("blockmuon", block_muon(1e-3, block_specs=blocks), "block"),
-        ("muonbp_block_phase", muon(1e-3, block_specs=blocks), "block"),
-        ("dion_r32", dion(1e-3, rank=32), "block"),
-    ]:
-        if matrix_opt is None:
-            opt = combine({"adamw": adamw(1e-3)}, jax.tree.map(lambda _: "adamw", labels))
-        else:
-            opt = combine({"muon": matrix_opt, "adamw": adamw(1e-3)}, labels)
-        state = opt.init(params)
+    variants = [
+        ("adamw", None, "block", "-", "-"),
+        ("muon_full", lambda b: muon_full(1e-3, bucketing=b, ns_backend="jnp"),
+         "full", "jnp", None),
+        ("blockmuon", lambda b: block_muon(1e-3, block_specs=blocks, bucketing=b,
+                                           ns_backend="jnp"), "block", "jnp", None),
+        ("muonbp_block_phase", lambda b: muon(1e-3, block_specs=blocks, bucketing=b,
+                                              ns_backend="jnp"), "block", "jnp", None),
+        ("dion_r32", lambda b: dion(1e-3, rank=32), "block", "-", "-"),
+    ]
+    for name, make, phase, backend, bucket_col in variants:
+        bucket_modes = (
+            [(bucket_col, None)]
+            if bucket_col is not None
+            else [("on", True), ("off", False)]
+        )
+        for bucket_label, bucketing in bucket_modes:
+            if make is None:
+                opt = combine(
+                    {"adamw": adamw(1e-3)}, jax.tree.map(lambda _: "adamw", labels)
+                )
+            else:
+                matrix_opt = make(bucketing) if bucketing is not None else make(True)
+                opt = combine({"muon": matrix_opt, "adamw": adamw(1e-3)}, labels)
+            state = opt.init(params)
 
-        @jax.jit
-        def step(g, s, p):
-            return opt.update(g, s, p, phase)
+            @jax.jit
+            def step(g, s, p):
+                return opt.update(g, s, p, phase)
 
-        us = timeit(step, grads, state, params, warmup=1, iters=3)
-        rows.append(row(f"opt_step_{name}", us, f"{n_params/1e6:.1f}M_params"))
+            us = timeit(step, grads, state, params, warmup=1, iters=3)
+            rows.append(
+                row(f"opt_step_{name}", us, f"{n_params/1e6:.1f}M_params",
+                    backend=backend, bucketing=bucket_label)
+            )
     return rows

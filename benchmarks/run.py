@@ -13,12 +13,13 @@ for the paper artifact it reproduces):
   two_stepsize   — Theorem 2: tied vs untied stepsizes
   roofline       — Sec Roofline: terms per (arch x shape x mesh) from dryrun
 
-Env: REPRO_BENCH_QUICK=1 for a fast pass; REPRO_BENCH_ONLY=mod1,mod2 to
-filter.
+Env: REPRO_BENCH_QUICK=1 (or ``--quick``) for a fast pass;
+REPRO_BENCH_ONLY=mod1,mod2 (or ``--only mod1,mod2``) to filter.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
@@ -38,10 +39,14 @@ MODULES = [
 
 
 def main() -> None:
-    quick = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
-    only = os.environ.get("REPRO_BENCH_ONLY")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="fast smoke pass")
+    ap.add_argument("--only", default=None, help="comma-separated module list")
+    args = ap.parse_args()
+    quick = args.quick or os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    only = args.only or os.environ.get("REPRO_BENCH_ONLY")
     mods = only.split(",") if only else MODULES
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,backend,bucketing")
     for name in mods:
         t0 = time.time()
         try:
@@ -50,7 +55,7 @@ def main() -> None:
                 print(line, flush=True)
         except Exception:
             traceback.print_exc(file=sys.stderr)
-            print(f"{name}_FAILED,0.0,see_stderr", flush=True)
+            print(f"{name}_FAILED,0.0,see_stderr,-,-", flush=True)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
 
 

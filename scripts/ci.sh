@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI smoke gate: tier-1 tests + quick NS-path benchmarks.
+#
+# The benchmark pass exists so perf regressions in the Newton-Schulz hot
+# path (backend dispatch, shape bucketing, fused kernel) surface in-repo:
+# it prints per-row backend/bucketing columns for eyeballing A/Bs and
+# fails the gate if any benchmark module errors out.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q -m "not slow"
+
+echo "== quick benchmarks (ns_cost, optimizer_step) =="
+out=$(REPRO_BENCH_ONLY=ns_cost,optimizer_step python -m benchmarks.run --quick)
+echo "$out"
+if echo "$out" | grep -q "_FAILED"; then
+    echo "benchmark module failed" >&2
+    exit 1
+fi

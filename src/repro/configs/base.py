@@ -113,6 +113,31 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class NSEngineConfig:
+    """Newton-Schulz execution-engine knobs (see ``repro/kernels/dispatch.py``).
+
+    ``backend`` picks the NS execution path ("jnp" pure-XLA chain or
+    "pallas" fused kernel, interpret-mode off-TPU); ``bucketing`` toggles
+    the shape-bucketed batched dispatch in ``core/bucketing.py`` (one NS
+    chain per distinct unit shape instead of one per parameter leaf).
+    Env overrides: ``REPRO_NS_BACKEND``, ``REPRO_NS_BUCKETING=0``.
+    """
+
+    backend: str = "jnp"          # "jnp" | "pallas"
+    bucketing: bool = True
+
+    @classmethod
+    def from_env(cls) -> "NSEngineConfig":
+        import os
+
+        return cls(
+            backend=os.environ.get("REPRO_NS_BACKEND", cls.backend),
+            bucketing=os.environ.get("REPRO_NS_BUCKETING", "1").lower()
+            not in ("0", "false", "off"),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class InputShape:
     name: str
     kind: str          # train | prefill | decode

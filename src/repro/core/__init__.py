@@ -7,6 +7,7 @@ from repro.core.blocking import (
     partition_blocks,
     unpartition_blocks,
 )
+from repro.core.bucketing import bucketed_orthogonalize, plan_buckets
 from repro.core.combine import apply_updates, combine, default_label_fn, label_tree
 from repro.core.dion import dion
 from repro.core.muon import (
@@ -20,6 +21,7 @@ from repro.core.newton_schulz import (
     JORDAN_COEFFS,
     PAPER_COEFFS,
     orthogonalize,
+    orthogonalize_jnp,
     orthogonality_error,
 )
 
@@ -29,6 +31,7 @@ __all__ = [
     "BlockSpec2D",
     "block_muon",
     "block_spec_from_partition",
+    "bucketed_orthogonalize",
     "combine",
     "default_label_fn",
     "dion",
@@ -39,8 +42,10 @@ __all__ = [
     "Optimizer",
     "orthogonality_error",
     "orthogonalize",
+    "orthogonalize_jnp",
     "PAPER_COEFFS",
     "partition_blocks",
     "phase_for_step",
+    "plan_buckets",
     "unpartition_blocks",
 ]

@@ -68,7 +68,7 @@ def combine(optimizers: dict[str, Optimizer], labels: PyTree) -> Optimizer:
         )
 
     def update(grads, state, params, phase: str = "block"):
-        flat_params, treedef = jax.tree.flatten_with_path(params)
+        flat_params, treedef = jax.tree_util.tree_flatten_with_path(params)
         merged: dict = {}
         new_inner = {}
         for name in label_names:
@@ -76,7 +76,7 @@ def combine(optimizers: dict[str, Optimizer], labels: PyTree) -> Optimizer:
             p = _mask(params, labels, name)
             upd, new_state = optimizers[name].update(g, state.inner[name], p, phase)
             new_inner[name] = new_state
-            for path, leaf in jax.tree.flatten_with_path(upd)[0]:
+            for path, leaf in jax.tree_util.tree_flatten_with_path(upd)[0]:
                 merged[_path_str(path)] = leaf
         flat_updates = [merged[_path_str(path)] for path, _ in flat_params]
         updates = jax.tree.unflatten(

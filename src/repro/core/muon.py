@@ -17,6 +17,17 @@ Two stepsizes (Theorem 2): ``lr_block`` and ``lr_full``. With
 orthogonalized update is additionally scaled by ``rms_target *
 sqrt(max(m_eff, n_eff))`` where the effective dims are the *block* dims on
 block steps and the full dims on full steps.
+
+Execution engine (see ``core/bucketing.py`` and ``kernels/dispatch.py``):
+by default the update is *shape-bucketed* — every NS unit in the step
+(whole matrices on full steps, shard-local blocks on block steps) is
+grouped by exact unit shape and each bucket runs as ONE batched
+Newton-Schulz chain, so the per-step NS dispatch count equals the number
+of distinct unit shapes rather than the number of parameter leaves.
+``bucketing=False`` restores the per-leaf path (same numerics; kept for
+A/B benchmarks and as the reference). ``ns_backend`` selects the NS
+execution backend ("jnp" | "pallas"); None defers to the dispatch
+registry default (``REPRO_NS_BACKEND`` env var, else "jnp").
 """
 
 from __future__ import annotations
@@ -27,8 +38,9 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocking
-from repro.core.newton_schulz import PAPER_COEFFS, orthogonalize
+from repro.core import blocking, newton_schulz
+from repro.core import bucketing as bucketing_lib
+from repro.core.newton_schulz import PAPER_COEFFS
 
 PyTree = Any
 Schedule = Callable[[jax.Array], jax.Array]
@@ -87,6 +99,8 @@ def muon(
     weight_decay: float = 0.0,
     block_specs: Optional[PyTree] = None,
     distribute_full: Optional[tuple] = None,
+    bucketing: bool = True,
+    ns_backend: Optional[str] = None,
 ) -> Optimizer:
     """Build the Muon-family optimizer (paper Algorithm 1).
 
@@ -108,6 +122,10 @@ def muon(
         gathers and orthogonalizes only its share of layers (Liu et al.
         2025 Distributed-Muon, expressed in GSPMD), cutting full-step NS
         FLOPs and gather traffic by ~axis_size.
+      bucketing: run NS through the shape-bucketed batched engine (one NS
+        chain per distinct unit shape). False restores per-leaf dispatch.
+      ns_backend: NS execution backend name for ``kernels.dispatch``
+        ("jnp" | "pallas"); None uses the registry default.
     """
     lr_full_fn = _as_schedule(lr_full)
     lr_block_fn = _as_schedule(lr_block if lr_block is not None else lr_full)
@@ -117,10 +135,15 @@ def muon(
         zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
         return OptState(momentum=zeros, count=jnp.zeros((), jnp.int32))
 
+    def _orth(u: jax.Array) -> jax.Array:
+        return newton_schulz.orthogonalize(
+            u, steps=ns_steps, coeffs=ns_coeffs, backend=ns_backend
+        )
+
     def _orth_full(u: jax.Array) -> jax.Array:
         if distribute_full is not None and u.ndim >= 3:
             return _orth_full_distributed(u)
-        return orthogonalize(u, steps=ns_steps, coeffs=ns_coeffs)
+        return _orth(u)
 
     def _orth_full_distributed(u: jax.Array) -> jax.Array:
         """Layer-distributed full NS: shard the stacked-matrix dim."""
@@ -139,7 +162,7 @@ def muon(
         u2 = jax.lax.with_sharding_constraint(
             u2, NamedSharding(mesh, PartitionSpec(axis, None, None))
         )
-        o = orthogonalize(u2, steps=ns_steps, coeffs=ns_coeffs)
+        o = _orth(u2)
         if pad:
             o = o[:stack]
         return o.reshape(*lead, m, n)
@@ -148,7 +171,7 @@ def muon(
         if bs is None or bs.num_blocks == 1:
             return _orth_full(u)
         blocks = blocking.partition_blocks(u, bs)
-        blocks = orthogonalize(blocks, steps=ns_steps, coeffs=ns_coeffs)
+        blocks = _orth(blocks)
         return blocking.unpartition_blocks(blocks, bs)
 
     def update(grads: PyTree, state: OptState, params: PyTree, phase: str = "block"):
@@ -174,24 +197,93 @@ def muon(
                 )
                 bs_by_path[key] = leaf
 
-        def per_param(path, g, m, p):
-            key = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-            bs = bs_by_path.get(key)
-            u = (g.astype(jnp.float32) + mu * m) if nesterov else m
-            mdim, ndim = int(u.shape[-2]), int(u.shape[-1])
-            if phase == "full" or bs is None or bs.num_blocks == 1:
-                o = _orth_full(u)
-                m_eff, n_eff = mdim, ndim
-            else:
-                o = _orth_block(u, bs)
-                m_eff, n_eff = mdim // bs.r, ndim // bs.c
-            scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
+        def finish(o, p, scale):
             upd = -lr * scale * o
             if weight_decay:
                 upd = upd - lr * weight_decay * p.astype(jnp.float32)
             return upd.astype(p.dtype)
 
-        updates = jax.tree_util.tree_map_with_path(per_param, grads, new_m, params)
+        def eff_dims(shape, bs):
+            mdim, ndim = int(shape[-2]), int(shape[-1])
+            if phase == "full" or bs is None or bs.num_blocks == 1:
+                return mdim, ndim
+            return mdim // bs.r, ndim // bs.c
+
+        def per_param(path, g, m, p):
+            key = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            bs = bs_by_path.get(key)
+            u = (g.astype(jnp.float32) + mu * m) if nesterov else m
+            if phase == "full" or bs is None or bs.num_blocks == 1:
+                o = _orth_full(u)
+            else:
+                o = _orth_block(u, bs)
+            m_eff, n_eff = eff_dims(u.shape, bs)
+            scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
+            return finish(o, p, scale)
+
+        def bucketed(grads, new_m, params):
+            """One NS chain per shape bucket instead of one per leaf."""
+            flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+            g_leaves = [l for _, l in flat]
+            m_leaves = jax.tree.leaves(new_m)
+            p_leaves = jax.tree.leaves(params)
+            u_leaves = [
+                (g.astype(jnp.float32) + mu * m) if nesterov else m
+                for g, m in zip(g_leaves, m_leaves)
+            ]
+            bs_leaves = [
+                bs_by_path.get(
+                    tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+                )
+                for path, _ in flat
+            ]
+            specs = [
+                None
+                if phase == "full" or bs is None or bs.num_blocks == 1
+                else bs
+                for bs in bs_leaves
+            ]
+            # Full steps concat-pack (the gather happens regardless, and the
+            # fat stack feeds distribute_full); block steps stack-pack so
+            # shard-local blocks keep their sharding — zero collectives.
+            if phase == "full":
+                o_leaves = bucketing_lib.bucketed_orthogonalize(
+                    u_leaves, specs, _orth_full, mode="concat"
+                )
+            elif distribute_full is None:
+                o_leaves = bucketing_lib.bucketed_orthogonalize(
+                    u_leaves, specs, _orth, mode="stack"
+                )
+            else:
+                # Block step with the distributed-full option: unblocked
+                # leaves keep their per-leaf _orth_full treatment (stacking
+                # them would change which leaves get layer-distributed NS);
+                # only the shard-local blocked leaves are bucketed.
+                o_leaves = list(
+                    bucketing_lib.bucketed_orthogonalize(
+                        [u for u, s in zip(u_leaves, specs) if s is not None],
+                        [s for s in specs if s is not None],
+                        _orth,
+                        mode="stack",
+                    )
+                )
+                merged = []
+                for u, s in zip(u_leaves, specs):
+                    merged.append(_orth_full(u) if s is None else o_leaves.pop(0))
+                o_leaves = merged
+            upd_leaves = []
+            for u, o, p, bs in zip(u_leaves, o_leaves, p_leaves, bs_leaves):
+                m_eff, n_eff = eff_dims(u.shape, bs)
+                scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
+                upd_leaves.append(finish(o, p, scale))
+            return jax.tree_util.tree_unflatten(treedef, upd_leaves)
+
+        if bucketing:
+            updates = bucketed(grads, new_m, params)
+        else:
+            updates = jax.tree_util.tree_map_with_path(
+                per_param, grads, new_m, params
+            )
         return updates, OptState(momentum=new_m, count=count)
 
     return Optimizer(init=init, update=update)

@@ -10,6 +10,13 @@ Two coefficient sets are provided:
 
 The implementation is batched: it operates on the trailing two dims and maps
 over any leading dims (layer-stacked or block-stacked parameters).
+
+Execution engine: ``orthogonalize`` routes through the backend registry in
+``repro.kernels.dispatch`` — ``"jnp"`` (default; the pure-jnp chain below)
+or ``"pallas"`` (the fused single-launch kernel). Select per-call via the
+``backend=`` argument, process-wide via ``dispatch.set_backend`` /
+``REPRO_NS_BACKEND``. ``orthogonalize_jnp`` is the registry's jnp entry and
+the numerics oracle for every other backend.
 """
 
 from __future__ import annotations
@@ -39,14 +46,31 @@ def _ns_iterations(x: jax.Array, steps: int, coeffs) -> jax.Array:
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "coeffs", "eps"))
 def orthogonalize(
     g: jax.Array,
     steps: int = 5,
     coeffs=PAPER_COEFFS,
     eps: float = 1e-7,
+    backend: str | None = None,
 ) -> jax.Array:
-    """Approximate ``Orth(g)`` over the trailing two dims.
+    """Approximate ``Orth(g)`` via the selected execution backend.
+
+    ``backend=None`` defers to the registry default (see module docstring).
+    All backends share the semantics documented on ``orthogonalize_jnp``.
+    """
+    from repro.kernels import dispatch  # late import: kernels layer is optional
+
+    return dispatch.orthogonalize(g, steps=steps, coeffs=coeffs, eps=eps, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "coeffs", "eps"))
+def orthogonalize_jnp(
+    g: jax.Array,
+    steps: int = 5,
+    coeffs=PAPER_COEFFS,
+    eps: float = 1e-7,
+) -> jax.Array:
+    """Approximate ``Orth(g)`` over the trailing two dims (pure-jnp engine).
 
     Always iterates on the smaller side: if m > n we orthogonalize ``g^T`` and
     transpose back, so the Gram matrix is ``min(m,n)^2``. Computation is done

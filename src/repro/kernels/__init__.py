@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel layer: Pallas compute hot-spots + the NS backend registry.
+
+``newton_schulz/`` holds the tiled matmul kernels, the fused batched NS
+iteration (``fused.py``), and the pure-jnp oracle (``ref.py``).
+``dispatch.py`` is the backend registry ("jnp" | "pallas") that
+``repro.core.newton_schulz.orthogonalize`` routes through; import it to
+select or register engines:
+
+    from repro.kernels import dispatch
+    with dispatch.use_backend("pallas"):
+        ...
+"""
+
+from repro.kernels import dispatch
+
+__all__ = ["dispatch"]

@@ -1,0 +1,109 @@
+"""Newton-Schulz backend registry: route ``orthogonalize`` to an engine.
+
+``core.newton_schulz.orthogonalize`` — the single entry point the optimizer,
+benchmarks, and tests all use — resolves its execution engine here, so the
+same model/optimizer code can be A/B'd across backends:
+
+  * ``"jnp"``    — the pure-jnp chain (XLA fuses it; the right default on
+    CPU and the numerics oracle everywhere).
+  * ``"pallas"`` — the fused single-launch kernel (``newton_schulz/fused.py``)
+    when the working set fits VMEM, falling back to the 3-launch tiled
+    kernels (2D) or jnp (stacked, oversized). Interpret mode is selected
+    automatically off-TPU, so the pallas path is correct (if slow) on CPU.
+
+Selection precedence: explicit ``backend=`` argument > ``set_backend()`` /
+``use_backend()`` override > ``REPRO_NS_BACKEND`` env var > ``"jnp"``.
+Backend resolution happens at trace time (the name is static), so switching
+backends retriggers jit specialization as expected.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable, Optional
+
+import jax
+
+ENV_VAR = "REPRO_NS_BACKEND"
+
+_REGISTRY: dict[str, Callable] = {}
+_override: Optional[str] = None
+
+
+def register_backend(name: str, fn: Callable) -> None:
+    """Register ``fn(g, steps, coeffs, eps) -> array`` under ``name``."""
+    _REGISTRY[name] = fn
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend() -> str:
+    """Resolve the active backend name (override > env var > 'jnp')."""
+    name = _override if _override is not None else os.environ.get(ENV_VAR, "jnp")
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown NS backend {name!r}; available: {available_backends()}"
+        )
+    return name
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Set (or with None, clear) the process-wide backend override."""
+    global _override
+    if name is not None and name not in _REGISTRY:
+        raise ValueError(
+            f"unknown NS backend {name!r}; available: {available_backends()}"
+        )
+    _override = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped backend override (used by benchmarks to A/B engines)."""
+    prev = _override
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def orthogonalize(g, *, steps, coeffs, eps, backend: Optional[str] = None):
+    """Dispatch ``Orth(g)`` to the selected backend."""
+    name = backend if backend is not None else get_backend()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown NS backend {name!r}; available: {available_backends()}"
+        )
+    return _REGISTRY[name](g, steps, coeffs, eps)
+
+
+def _jnp_backend(g, steps, coeffs, eps):
+    from repro.core.newton_schulz import orthogonalize_jnp
+
+    return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps)
+
+
+def _pallas_backend(g, steps, coeffs, eps):
+    from repro.core.newton_schulz import orthogonalize_jnp
+    from repro.kernels.newton_schulz import fused, ops
+
+    interpret = jax.default_backend() != "tpu"
+    if fused.fits_vmem(g.shape):
+        return fused.orthogonalize(
+            g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret
+        )
+    if g.ndim == 2:
+        # Oversized single matrix: tiled 3-launch kernels stream through HBM.
+        return ops.orthogonalize(
+            g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret
+        )
+    # Oversized stacks have no tiled batched path yet (see ROADMAP).
+    return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps)
+
+
+register_backend("jnp", _jnp_backend)
+register_backend("pallas", _pallas_backend)

@@ -1,0 +1,189 @@
+"""Fused, batched Newton-Schulz iteration: one ``pallas_call`` per NS step.
+
+The tiled kernels in ``newton_schulz.py`` execute one NS iteration as three
+chained launches (``matmul`` for the Gram matrix, two ``fma_matmul`` for the
+polynomial and the update), bouncing every intermediate through HBM. This
+module fuses the whole iteration
+
+    A = X X^T;  P = bA + cA^2;  Y = aX + P X
+
+into a single kernel: per grid step, one stacked matrix is read from HBM
+into VMEM once, the Gram matrix lives in an fp32 VMEM scratch accumulator,
+and only the final ``Y`` is written back — one HBM read and one HBM write
+per NS iteration instead of six round-trips.
+
+Two structural optimizations:
+
+  * **Batched grid.** The grid is the leading stack dimension, so one launch
+    covers a whole shape bucket (see ``core/bucketing.py``) — stacked layers
+    or blocks of identical shape run as a single kernel with no per-matrix
+    dispatch overhead.
+  * **Gram symmetry.** ``A = X X^T`` is symmetric, so the Gram stage only
+    computes the upper-triangular (i <= j) tile pairs on the MXU and mirrors
+    the transpose into the lower triangle — ~2x fewer Gram-stage MXU tiles.
+
+Sizing: the per-step working set is ``m_p x n_p`` for X/Y plus two
+``m_p x m_p`` fp32 Gram-sized buffers (m_p = padded small side). ``fits_vmem``
+gates dispatch so oversized matrices fall back to the tiled/jnp paths.
+
+Like the sibling kernels this file is validated in interpret mode on CPU
+(``interpret=True``) against ``ref.py``; on TPU the same code lowers to
+Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.newton_schulz.newton_schulz import CompilerParams, round_up
+
+# Gram-stage tile (rows of X per MXU dot). 128 matches the MXU systolic array.
+DEFAULT_GRAM_TILE = 128
+
+# Conservative per-core VMEM budget for the fused working set (real VMEM is
+# ~16 MiB/core; leave headroom for double-buffering the HBM<->VMEM streams).
+VMEM_BUDGET_BYTES = 12 * 2**20
+
+
+def _fused_ns_kernel(x_ref, out_ref, gram_ref, *, a, b, c, tm, nt):
+    """One full NS iteration on the (1, m_p, n_p) block in VMEM.
+
+    ``gram_ref`` is the fp32 VMEM accumulator for ``A = X X^T``; only
+    upper-triangular tile pairs hit the MXU, the rest is mirrored.
+    """
+    x = x_ref[0].astype(jnp.float32)
+    for i in range(nt):
+        xi = x[i * tm : (i + 1) * tm, :]
+        for j in range(i, nt):
+            xj = x[j * tm : (j + 1) * tm, :]
+            tile = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
+            gram_ref[i * tm : (i + 1) * tm, j * tm : (j + 1) * tm] = tile
+            if j > i:
+                gram_ref[j * tm : (j + 1) * tm, i * tm : (i + 1) * tm] = tile.T
+    gram = gram_ref[...]
+    poly = b * gram + c * jnp.dot(gram, gram, preferred_element_type=jnp.float32)
+    y = a * x + jnp.dot(poly, x, preferred_element_type=jnp.float32)
+    out_ref[0] = y.astype(out_ref.dtype)
+
+
+def _padded_dims(m: int, n: int, tm: int) -> tuple[int, int, int]:
+    """(tile, m_p, n_p): Gram tile clamped to the matrix, TPU-aligned pads."""
+    tm_ = min(tm, round_up(m, 8))
+    return tm_, round_up(m, tm_), round_up(n, 128)
+
+
+def fits_vmem(shape, *, tm: int = DEFAULT_GRAM_TILE, budget: int = VMEM_BUDGET_BYTES) -> bool:
+    """Whether the fused kernel's VMEM working set fits for ``shape``.
+
+    Counts the fp32 X and Y blocks plus the Gram accumulator and the
+    polynomial temporary (both ``m_p x m_p``), using the post-transpose
+    small side as ``m``.
+    """
+    m, n = int(shape[-2]), int(shape[-1])
+    m, n = min(m, n), max(m, n)
+    tm_, mp, np_ = _padded_dims(m, n, tm)
+    del tm_
+    working = 4 * (2 * mp * np_ + 2 * mp * mp)
+    return working <= budget
+
+
+def _ns_iteration_padded(
+    xp: jax.Array, a: float, b: float, c: float, tm: int, interpret: bool
+) -> jax.Array:
+    """Launch the fused kernel on an already tile-aligned ``(B, m_p, n_p)``."""
+    bsz, mp, np_ = xp.shape
+    return pl.pallas_call(
+        functools.partial(_fused_ns_kernel, a=a, b=b, c=c, tm=tm, nt=mp // tm),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, mp, np_), lambda i: (i, 0, 0), memory_space=pltpu.VMEM)
+        ],
+        out_specs=pl.BlockSpec(
+            (1, mp, np_), lambda i: (i, 0, 0), memory_space=pltpu.VMEM
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, mp, np_), xp.dtype),
+        scratch_shapes=[pltpu.VMEM((mp, mp), jnp.float32)],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xp)
+
+
+def _pad_stack(x: jax.Array, mp: int, np_: int) -> jax.Array:
+    """Zero-pad the trailing dims of ``(B, m, n)`` to ``(B, m_p, n_p)``.
+
+    Zero-padding is exact for NS: padded rows/cols of X produce zero
+    rows/cols in A and in ``(bA + cA^2) X``, and ``aX`` keeps the pad zero,
+    so slicing the output back recovers the unpadded result.
+    """
+    _, m, n = x.shape
+    if (mp, np_) == (m, n):
+        return x
+    return jnp.pad(x, ((0, 0), (0, mp - m), (0, np_ - n)))
+
+
+@functools.partial(jax.jit, static_argnames=("coeffs", "tm", "interpret"))
+def ns_iteration_batched(
+    x: jax.Array,
+    coeffs,
+    *,
+    tm: int = DEFAULT_GRAM_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """One fused NS iteration over a stack ``(B, m, n)`` — one launch total."""
+    if x.ndim != 3:
+        raise ValueError(f"fused kernel expects (stack, m, n), got {x.shape}")
+    a, b, c = (float(v) for v in coeffs)
+    _, m, n = x.shape
+    tm_, mp, np_ = _padded_dims(m, n, tm)
+    out = _ns_iteration_padded(
+        _pad_stack(x, mp, np_), a, b, c, tm_, interpret
+    )
+    return out[:, :m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "coeffs", "eps", "tm", "interpret")
+)
+def orthogonalize(
+    g: jax.Array,
+    steps: int = 5,
+    coeffs=(2.0, -1.5, 0.5),
+    *,
+    eps: float = 1e-7,
+    tm: int = DEFAULT_GRAM_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused-kernel NS orthogonalization over the trailing two dims.
+
+    Accepts arbitrary leading (stack) dims; matches
+    ``core.newton_schulz.orthogonalize`` numerics — iterate on the smaller
+    side, fro-normalize, fp32 internally, cast back at the end.
+    """
+    if g.ndim < 2:
+        raise ValueError(f"orthogonalize expects a matrix, got shape {g.shape}")
+    orig_dtype = g.dtype
+    orig_shape = g.shape
+    *lead, m, n = g.shape
+    x = g.astype(jnp.float32).reshape(-1, m, n)
+    transpose = m > n
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+        m, n = n, m
+    norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
+    x = x / (norm + eps)
+    # Pad once for the whole chain (zero-pad is NS-exact, see _pad_stack) so
+    # each iteration is exactly one launch with no pad/slice copies between.
+    a, b, c = (float(v) for v in coeffs)
+    tm_, mp, np_ = _padded_dims(m, n, tm)
+    x = _pad_stack(x, mp, np_)
+    for _ in range(steps):
+        x = _ns_iteration_padded(x, a, b, c, tm_, interpret)
+    x = x[:, :m, :n]
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    return x.reshape(orig_shape).astype(orig_dtype)

@@ -18,6 +18,10 @@ double-buffering.
 This container is CPU-only: kernels are *validated in interpret mode*
 (pl.pallas_call(..., interpret=True) executes the kernel body in Python)
 against ``ref.py``; on a real TPU the same code lowers to Mosaic.
+
+These tiled kernels remain the fallback path for matrices whose fused
+working set exceeds VMEM; the default kernel path is the single-launch
+fused iteration in ``fused.py`` (selected via ``kernels/dispatch.py``).
 """
 
 from __future__ import annotations
@@ -33,6 +37,12 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 512
+
+# JAX 0.4.x exposes TPUCompilerParams; newer releases renamed it to
+# CompilerParams. Resolve once so every kernel in this package works on both.
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
 
 
 def _matmul_kernel(x_ref, y_ref, out_ref, acc_ref, *, n_k: int):
@@ -73,10 +83,15 @@ def _fma_matmul_kernel(x_ref, y_ref, c_ref, out_ref, acc_ref, *, n_k: int, alpha
         ).astype(out_ref.dtype)
 
 
+def round_up(v: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` >= ``v``."""
+    return -(-v // mult) * mult
+
+
 def _pad_to(x, m_mult, n_mult):
     m, n = x.shape
-    pm = (-m) % m_mult
-    pn = (-n) % n_mult
+    pm = round_up(m, m_mult) - m
+    pn = round_up(n, n_mult) - n
     if pm or pn:
         x = jnp.pad(x, ((0, pm), (0, pn)))
     return x
@@ -112,7 +127,7 @@ def matmul(
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -157,7 +172,7 @@ def fma_matmul(
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

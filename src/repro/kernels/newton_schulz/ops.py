@@ -1,4 +1,11 @@
-"""jit'd wrappers: full Newton-Schulz orthogonalization on Pallas kernels."""
+"""jit'd wrappers: full Newton-Schulz orthogonalization on Pallas kernels.
+
+This is the *tiled* path — one NS iteration is 3 kernel launches (matmul +
+2 fused-epilogue fma_matmuls) streaming through HBM, so it scales to
+matrices of any size. For matrices whose working set fits VMEM the fused
+single-launch kernel in ``fused.py`` is preferred; ``kernels/dispatch.py``
+picks between them for the "pallas" backend.
+"""
 
 from __future__ import annotations
 
@@ -39,7 +46,10 @@ def orthogonalize(
     smaller side, fp32 internally.
     """
     if g.ndim != 2:
-        raise ValueError("kernel path expects a single matrix; vmap for batches")
+        raise ValueError(
+            "tiled kernel path expects a single matrix; "
+            "use fused.orthogonalize for stacked batches"
+        )
     orig_dtype = g.dtype
     x = g.astype(jnp.float32)
     transpose = x.shape[0] > x.shape[1]

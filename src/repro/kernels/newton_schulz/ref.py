@@ -42,3 +42,21 @@ def newton_schulz_ref(g: jnp.ndarray, steps: int, coeffs, eps: float = 1e-7) -> 
     if transpose:
         x = x.T
     return x.astype(g.dtype)
+
+
+def batched_ns_iteration_ref(x: jnp.ndarray, coeffs) -> jnp.ndarray:
+    """Oracle for the fused batched kernel: per-matrix NS step over a stack."""
+    return jnp.stack([ns_iteration_ref(x[i], coeffs) for i in range(x.shape[0])])
+
+
+def batched_newton_schulz_ref(
+    g: jnp.ndarray, steps: int, coeffs, eps: float = 1e-7
+) -> jnp.ndarray:
+    """Oracle for the fused batched orthogonalizer: loop the 2D oracle over
+    all leading dims and restack."""
+    *lead, m, n = g.shape
+    flat = g.reshape(-1, m, n)
+    out = jnp.stack(
+        [newton_schulz_ref(flat[i], steps, coeffs, eps) for i in range(flat.shape[0])]
+    )
+    return out.reshape(g.shape)

@@ -331,7 +331,7 @@ def _attach_opt_shardings(a_opt, a_params, mesh, zero1: bool = False):
     param_shardings = jax.tree.map(lambda x: x.sharding, a_params)
     flat_shard = {  # path string -> sharding
         "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path): s
-        for path, s in jax.tree.flatten_with_path(param_shardings)[0]
+        for path, s in jax.tree_util.tree_flatten_with_path(param_shardings)[0]
     }
     data_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
 

@@ -13,6 +13,7 @@ Example (CPU-scale):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -21,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import NSEngineConfig
 from repro.core import adamw, block_muon, combine, dion, label_tree, muon, muon_full
 from repro.core.muon import phase_for_step
 from repro.core.schedule import cosine, wsd
@@ -33,22 +35,26 @@ from repro.training.train_step import init_train_state, make_train_step_fns
 
 
 def build_optimizer(name, params, *, lr, adam_lr, period, schedule_fn=None,
-                    block_specs=None, rank=64, weight_decay=0.1):
+                    block_specs=None, rank=64, weight_decay=0.1, engine=None):
     labels = label_tree(params)
     lr_s = schedule_fn(lr) if schedule_fn else lr
     adam_s = schedule_fn(adam_lr) if schedule_fn else adam_lr
+    engine = engine if engine is not None else NSEngineConfig.from_env()
+    ns_kw = dict(bucketing=engine.bucketing, ns_backend=engine.backend)
     if name == "adamw":
         return combine({"adamw": adamw(adam_s, weight_decay=weight_decay)},
                        jax.tree.map(lambda _: "adamw", labels)), None
     if name == "dion":
         matrix_opt = dion(lr_s, rank=rank, weight_decay=weight_decay)
     elif name == "muon":
-        matrix_opt = muon_full(lr_s, weight_decay=weight_decay, block_specs=block_specs)
+        matrix_opt = muon_full(lr_s, weight_decay=weight_decay,
+                               block_specs=block_specs, **ns_kw)
     elif name == "blockmuon":
-        matrix_opt = block_muon(lr_s, weight_decay=weight_decay, block_specs=block_specs)
+        matrix_opt = block_muon(lr_s, weight_decay=weight_decay,
+                                block_specs=block_specs, **ns_kw)
     elif name == "muonbp":
         matrix_opt = muon(lr_s, lr_s, period=period, weight_decay=weight_decay,
-                          block_specs=block_specs)
+                          block_specs=block_specs, **ns_kw)
     else:
         raise ValueError(name)
     period_eff = {"muon": 1, "blockmuon": None, "dion": 1, "muonbp": period}[name]
@@ -69,6 +75,10 @@ def main():
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--adam-lr", type=float, default=0.008)
     ap.add_argument("--schedule", default="wsd", choices=["wsd", "cosine", "const"])
+    ap.add_argument("--ns-backend", default=None, choices=["jnp", "pallas"],
+                    help="NS execution backend (default: REPRO_NS_BACKEND or jnp)")
+    ap.add_argument("--no-ns-bucketing", action="store_true",
+                    help="disable shape-bucketed batched NS dispatch")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
@@ -94,9 +104,15 @@ def main():
     sched = {"wsd": lambda peak: wsd(peak, args.steps),
              "cosine": lambda peak: cosine(peak, args.steps),
              "const": lambda peak: peak}[args.schedule]
+    engine = NSEngineConfig.from_env()
+    if args.ns_backend:
+        engine = dataclasses.replace(engine, backend=args.ns_backend)
+    if args.no_ns_bucketing:
+        engine = dataclasses.replace(engine, bucketing=False)
     optimizer, period = build_optimizer(
         args.optimizer, params, lr=args.lr, adam_lr=args.adam_lr,
         period=args.period, schedule_fn=sched, block_specs=bspecs,
+        engine=engine,
     )
 
     state = init_train_state(params, optimizer)

@@ -17,7 +17,7 @@ import numpy as np
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
-    for path, leaf in jax.tree.flatten_with_path(tree)[0]:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
@@ -36,7 +36,7 @@ def save(path: str, params: Any, opt_state: Any = None, step: int = 0, extra: Op
 
 
 def _unflatten_into(template, flat: dict[str, np.ndarray], shardings=None):
-    leaves_with_path, treedef = jax.tree.flatten_with_path(template)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
     shard_leaves = (
         jax.tree.flatten(shardings)[0] if shardings is not None else [None] * len(leaves_with_path)
     )

@@ -1,11 +1,22 @@
-"""Block partitioning: property tests (hypothesis) + spec derivation."""
+"""Block partitioning: property tests (hypothesis) + spec derivation.
 
-import hypothesis
-import hypothesis.strategies as st
+The roundtrip property test uses hypothesis when available and a
+deterministic parametrization otherwise, so the suite collects everywhere.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.blocking import (
     BlockSpec2D,
@@ -15,22 +26,43 @@ from repro.core.blocking import (
 )
 
 
-@hypothesis.settings(deadline=None, max_examples=30)
-@hypothesis.given(
-    r=st.integers(1, 4),
-    c=st.integers(1, 4),
-    mb=st.integers(1, 8),
-    nb=st.integers(1, 8),
-    lead=st.integers(0, 2),
-    seed=st.integers(0, 999),
-)
-def test_partition_roundtrip(r, c, mb, nb, lead, seed):
+def _check_partition_roundtrip(r, c, mb, nb, lead, seed):
     shape = (3,) * lead + (r * mb, c * nb)
     x = jax.random.normal(jax.random.PRNGKey(seed), shape)
     bs = BlockSpec2D(r, c)
     blocks = partition_blocks(x, bs)
     assert blocks.shape == (3,) * lead + (r * c, mb, nb)
     np.testing.assert_array_equal(np.asarray(unpartition_blocks(blocks, bs)), np.asarray(x))
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.settings(deadline=None, max_examples=30)
+    @hypothesis.given(
+        r=st.integers(1, 4),
+        c=st.integers(1, 4),
+        mb=st.integers(1, 8),
+        nb=st.integers(1, 8),
+        lead=st.integers(0, 2),
+        seed=st.integers(0, 999),
+    )
+    def test_partition_roundtrip(r, c, mb, nb, lead, seed):
+        _check_partition_roundtrip(r, c, mb, nb, lead, seed)
+
+else:
+
+    @pytest.mark.parametrize(
+        "r,c,mb,nb,lead,seed",
+        [
+            (1, 1, 1, 1, 0, 0),
+            (2, 4, 3, 5, 0, 1),
+            (4, 1, 8, 2, 1, 2),
+            (3, 3, 4, 4, 2, 3),
+            (1, 4, 7, 1, 1, 4),
+        ],
+    )
+    def test_partition_roundtrip(r, c, mb, nb, lead, seed):
+        _check_partition_roundtrip(r, c, mb, nb, lead, seed)
 
 
 def test_blocks_are_contiguous_submatrices():

@@ -1,11 +1,21 @@
-"""Newton-Schulz orthogonalization: unit + property tests."""
+"""Newton-Schulz orthogonalization: unit + property tests.
 
-import hypothesis
-import hypothesis.strategies as st
+Property tests use hypothesis when available and fall back to a small
+deterministic parametrization otherwise, so the suite collects everywhere.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.newton_schulz import (
     JORDAN_COEFFS,
@@ -63,14 +73,7 @@ def test_bf16_input_roundtrip(key):
     assert not bool(jnp.any(jnp.isnan(o.astype(jnp.float32))))
 
 
-@hypothesis.settings(deadline=None, max_examples=20)
-@hypothesis.given(
-    m=st.integers(4, 48),
-    n=st.integers(4, 48),
-    scale=st.floats(1e-3, 1e3),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_scale_invariance(m, n, scale, seed):
+def _check_scale_invariance(m, n, scale, seed):
     """Orth(c G) == Orth(G): the fro-normalization makes NS scale-free."""
     g = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
     o1 = orthogonalize(g, steps=5)
@@ -78,14 +81,47 @@ def test_scale_invariance(m, n, scale, seed):
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
 
 
-@hypothesis.settings(deadline=None, max_examples=15)
-@hypothesis.given(m=st.integers(8, 40), n=st.integers(8, 40), seed=st.integers(0, 1000))
-def test_singular_values_bounded(m, n, seed):
+def _check_singular_values_bounded(m, n, seed):
     g = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
     o = orthogonalize(g, steps=10)
     sv = jnp.linalg.svd(o.astype(jnp.float32), compute_uv=False)
     assert float(sv.max()) < 1.3
     assert not bool(jnp.any(jnp.isnan(o)))
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.settings(deadline=None, max_examples=20)
+    @hypothesis.given(
+        m=st.integers(4, 48),
+        n=st.integers(4, 48),
+        scale=st.floats(1e-3, 1e3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_scale_invariance(m, n, scale, seed):
+        _check_scale_invariance(m, n, scale, seed)
+
+    @hypothesis.settings(deadline=None, max_examples=15)
+    @hypothesis.given(
+        m=st.integers(8, 40), n=st.integers(8, 40), seed=st.integers(0, 1000)
+    )
+    def test_singular_values_bounded(m, n, seed):
+        _check_singular_values_bounded(m, n, seed)
+
+else:
+
+    @pytest.mark.parametrize(
+        "m,n,scale,seed",
+        [(4, 48, 1e-3, 0), (48, 4, 1e3, 1), (17, 23, 37.5, 2), (32, 32, 0.004, 3)],
+    )
+    def test_scale_invariance(m, n, scale, seed):
+        _check_scale_invariance(m, n, scale, seed)
+
+    @pytest.mark.parametrize(
+        "m,n,seed", [(8, 40, 0), (40, 8, 1), (19, 29, 2), (40, 40, 3)]
+    )
+    def test_singular_values_bounded(m, n, seed):
+        _check_singular_values_bounded(m, n, seed)
 
 
 def test_zero_matrix_safe():

@@ -1,0 +1,282 @@
+"""Batched/fused NS execution engine: fused kernel, bucketing, dispatch.
+
+Acceptance coverage for the engine PR:
+  * fused single-launch kernel parity vs ref.py (batched, non-square,
+    non-tile-multiple, bf16) in interpret mode
+  * shape bucketing round-trip: bucketed vs per-leaf optimizer updates are
+    bitwise-close on a real param pytree
+  * optimizer-step NS dispatch count == number of shape buckets
+  * backend registry selection (argument / override / env var)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BlockSpec2D,
+    adamw,
+    bucketed_orthogonalize,
+    combine,
+    label_tree,
+    muon,
+    plan_buckets,
+)
+from repro.core import newton_schulz
+from repro.core.newton_schulz import PAPER_COEFFS, orthogonalize, orthogonalize_jnp
+from repro.kernels import dispatch
+from repro.kernels.newton_schulz import fused, ref
+
+from conftest import tiny_cfg
+
+
+# ---------------------------------------------------------------- fused kernel
+
+FUSED_SHAPES = [
+    (1, 64, 64),     # single square matrix
+    (3, 64, 96),     # batched, non-square
+    (2, 100, 36),    # tall units (kernel path transposes), ragged dims
+    (5, 17, 130),    # non-tile-multiple rows AND cols (exercises padding)
+    (4, 8, 8),       # tiny blocks, way below one tile
+]
+
+
+@pytest.mark.parametrize("shape", FUSED_SHAPES)
+def test_fused_iteration_matches_ref(shape):
+    x = jax.random.normal(jax.random.PRNGKey(shape[1]), shape)
+    x = x / jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
+    out = fused.ns_iteration_batched(x, PAPER_COEFFS, interpret=True)
+    expect = ref.batched_ns_iteration_ref(x, PAPER_COEFFS)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("shape", FUSED_SHAPES)
+@pytest.mark.parametrize("steps", [1, 5])
+def test_fused_orthogonalize_matches_ref(shape, steps):
+    g = jax.random.normal(jax.random.PRNGKey(steps), shape)
+    out = fused.orthogonalize(g, steps=steps, interpret=True)
+    expect = ref.batched_newton_schulz_ref(g, steps, PAPER_COEFFS)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+    # and against the jnp engine, which is the optimizer's default
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(orthogonalize_jnp(g, steps=steps)), atol=1e-5
+    )
+
+
+def test_fused_bf16_input():
+    g = jax.random.normal(jax.random.PRNGKey(7), (2, 48, 72), jnp.bfloat16)
+    out = fused.orthogonalize(g, steps=5, interpret=True)
+    assert out.dtype == jnp.bfloat16
+    expect = ref.batched_newton_schulz_ref(g, 5, PAPER_COEFFS)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_fused_leading_dims_and_2d():
+    g = jax.random.normal(jax.random.PRNGKey(9), (2, 3, 32, 48))
+    out = fused.orthogonalize(g, steps=3, interpret=True)
+    assert out.shape == g.shape
+    g2 = g[0, 0]
+    out2 = fused.orthogonalize(g2, steps=3, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(out2), atol=1e-6)
+
+
+def test_fits_vmem_gate():
+    assert fused.fits_vmem((64, 256, 256))
+    assert fused.fits_vmem((2048, 128))          # skinny: small side bounds Gram
+    assert not fused.fits_vmem((8192, 8192))     # Gram alone is 256 MiB
+
+
+# ------------------------------------------------------------------- bucketing
+
+def test_plan_buckets_groups_by_unit_shape():
+    leaves = [
+        jax.ShapeDtypeStruct((32, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64, 32), jnp.float32),   # own-orientation bucket
+        jax.ShapeDtypeStruct((2, 32, 64), jnp.float32),  # stacked layers
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+    ]
+    specs = [None, None, None, None]
+    buckets = plan_buckets(leaves, specs)
+    assert list(buckets) == [
+        (32, 64, "float32"), (64, 32, "float32"), (16, 16, "float32")
+    ]
+    assert buckets[(32, 64, "float32")] == [0, 2]
+
+    # blocking changes the unit shape: a (2,2)-blocked 16x16 is 4 8x8 units
+    buckets = plan_buckets(leaves, [None, None, None, BlockSpec2D(2, 2)])
+    assert (8, 8, "float32") in buckets
+
+
+def test_bucketed_orthogonalize_one_call_per_bucket():
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    leaves = [
+        jax.random.normal(keys[0], (32, 64)),
+        jax.random.normal(keys[1], (64, 32)),
+        jax.random.normal(keys[2], (2, 32, 64)),
+        jax.random.normal(keys[3], (16, 16)),
+    ]
+    specs = [None, None, None, BlockSpec2D(2, 2)]
+    calls = []
+
+    def orth(x):
+        calls.append(x.shape)
+        return orthogonalize_jnp(x, steps=5)
+
+    outs = bucketed_orthogonalize(leaves, specs, orth)
+    assert len(calls) == len(plan_buckets(leaves, specs)) == 3
+    assert calls[0] == (3, 32, 64)  # 1 + 2 stacked units share the bucket
+    for leaf, out, spec in zip(leaves, outs, specs):
+        assert out.shape == leaf.shape and out.dtype == leaf.dtype
+        if spec is None:
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(orthogonalize_jnp(leaf, steps=5)),
+                atol=1e-6,
+            )
+
+
+def test_stack_mode_buckets_by_blocked_shape():
+    """Stack packing: strict per-shape buckets via a new leading axis."""
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    leaves = [
+        jax.random.normal(keys[0], (16, 32)),
+        jax.random.normal(keys[1], (16, 32)),
+        jax.random.normal(keys[2], (2, 16, 32)),  # extra lead dim: own bucket
+    ]
+    specs = [BlockSpec2D(1, 2), BlockSpec2D(1, 2), BlockSpec2D(1, 2)]
+    calls = []
+
+    def orth(x):
+        calls.append(x.shape)
+        return orthogonalize_jnp(x, steps=5)
+
+    outs = bucketed_orthogonalize(leaves, specs, orth, mode="stack")
+    assert calls == [(2, 2, 16, 16), (2, 2, 16, 16)]
+    assert len(plan_buckets(leaves, specs, mode="stack")) == 2
+    # parity with the concat packing on identical inputs
+    outs_c = bucketed_orthogonalize(leaves, specs, orth, mode="concat")
+    for a, b in zip(outs, outs_c):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def _real_param_setup():
+    from repro.models.model import init_params
+
+    cfg = tiny_cfg("muonbp-960m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    grads = jax.tree.map(lambda p: 0.01 * jnp.ones_like(p), params)
+    labels = label_tree(params)
+    blocks = jax.tree.map(
+        lambda p: BlockSpec2D(1, 4)
+        if p.ndim >= 2 and p.shape[-1] % 4 == 0
+        else None,
+        params,
+    )
+    blocks = jax.tree.map(
+        lambda b, l: b if l == "muon" else None, blocks, labels,
+        is_leaf=lambda x: x is None or isinstance(x, BlockSpec2D),
+    )
+    return params, grads, labels, blocks
+
+
+@pytest.mark.parametrize("phase", ["block", "full"])
+def test_bucketed_update_matches_per_leaf_on_real_pytree(phase):
+    """Acceptance: bucketed vs per-leaf optimizer updates bitwise-close."""
+    params, grads, labels, blocks = _real_param_setup()
+
+    def build(bucketing):
+        matrix = muon(1e-3, block_specs=blocks, bucketing=bucketing)
+        return combine({"muon": matrix, "adamw": adamw(1e-3)}, labels)
+
+    on, off = build(True), build(False)
+    u_on, _ = on.update(grads, on.init(params), params, phase)
+    u_off, _ = off.update(grads, off.init(params), params, phase)
+    flat_on = jax.tree.leaves(u_on)
+    flat_off = jax.tree.leaves(u_off)
+    assert len(flat_on) == len(flat_off)
+    for a, b in zip(flat_on, flat_off):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=0, atol=1e-7,
+        )
+
+
+@pytest.mark.parametrize("phase", ["block", "full"])
+def test_ns_dispatch_count_equals_bucket_count(phase, monkeypatch):
+    """Acceptance: one NS chain per shape bucket, not per parameter leaf."""
+    params, grads, labels, blocks = _real_param_setup()
+    matrix = muon(1e-3, block_specs=blocks, bucketing=True)
+    opt = combine({"muon": matrix, "adamw": adamw(1e-3)}, labels)
+    state = opt.init(params)
+
+    calls = []
+    real = newton_schulz.orthogonalize
+    monkeypatch.setattr(
+        newton_schulz, "orthogonalize",
+        lambda g, *a, **kw: (calls.append(g.shape), real(g, *a, **kw))[1],
+    )
+    opt.update(grads, state, params, phase)
+
+    flat_labels = jax.tree.leaves(labels)
+    flat_params = jax.tree.leaves(params)
+    flat_blocks = jax.tree_util.tree_flatten(
+        blocks, is_leaf=lambda x: x is None or isinstance(x, BlockSpec2D)
+    )[0]
+    leaves, specs = [], []
+    for p, b, l in zip(flat_params, flat_blocks, flat_labels):
+        if l != "muon":
+            continue
+        leaves.append(jax.ShapeDtypeStruct(p.shape, jnp.float32))
+        specs.append(b if phase == "block" else None)
+    specs = [s if (s is not None and s.num_blocks > 1) else None for s in specs]
+    mode = "stack" if phase == "block" else "concat"
+    expected = len(plan_buckets(leaves, specs, mode=mode))
+
+    n_muon_leaves = len(leaves)
+    assert len(calls) == expected
+    assert expected < n_muon_leaves  # bucketing actually coalesced dispatches
+
+
+# -------------------------------------------------------------------- dispatch
+
+def test_backend_selection_precedence(monkeypatch):
+    assert set(dispatch.available_backends()) >= {"jnp", "pallas"}
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    assert dispatch.get_backend() == "jnp"
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+    assert dispatch.get_backend() == "pallas"
+    with dispatch.use_backend("jnp"):
+        assert dispatch.get_backend() == "jnp"
+    assert dispatch.get_backend() == "pallas"
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    with pytest.raises(ValueError):
+        dispatch.set_backend("nope")
+    with pytest.raises(ValueError):
+        dispatch.orthogonalize(
+            jnp.ones((4, 4)), steps=1, coeffs=PAPER_COEFFS, eps=1e-7,
+            backend="nope",
+        )
+
+
+@pytest.mark.parametrize("shape", [(32, 64), (3, 24, 40)])
+def test_pallas_backend_matches_jnp(shape):
+    g = jax.random.normal(jax.random.PRNGKey(11), shape)
+    a = orthogonalize(g, steps=5, backend="jnp")
+    b = orthogonalize(g, steps=5, backend="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_env_var_routes_optimizer(monkeypatch):
+    """REPRO_NS_BACKEND flips the engine under the public entry point."""
+    g = jax.random.normal(jax.random.PRNGKey(13), (16, 24))
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+    out = orthogonalize(g, steps=3)
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(orthogonalize_jnp(g, steps=3)), atol=1e-5
+    )

@@ -38,8 +38,8 @@ def test_param_specs_divisible(arch, key):
             assert dim % prod == 0, (path, leaf.shape, spec)
 
     for (path, leaf), (_, spec) in zip(
-        jax.tree.flatten_with_path(a_params)[0],
-        jax.tree.flatten_with_path(specs, is_leaf=lambda x: isinstance(x, P))[0],
+        jax.tree_util.tree_flatten_with_path(a_params)[0],
+        jax.tree_util.tree_flatten_with_path(specs, is_leaf=lambda x: isinstance(x, P))[0],
     ):
         check(path, leaf, spec)
 
@@ -52,7 +52,7 @@ def test_big_matrices_are_sharded(arch, key):
     specs = sh.param_specs(a_params, cfg, MESH)
     flat = {
         "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path): spec
-        for path, spec in jax.tree.flatten_with_path(
+        for path, spec in jax.tree_util.tree_flatten_with_path(
             specs, is_leaf=lambda x: isinstance(x, P)
         )[0]
     }
