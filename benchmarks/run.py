@@ -46,7 +46,7 @@ def main() -> None:
     quick = args.quick or os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
     only = args.only or os.environ.get("REPRO_BENCH_ONLY")
     mods = only.split(",") if only else MODULES
-    print("name,us_per_call,derived,backend,bucketing")
+    print("name,us_per_call,derived,backend,bucketing,engine,predicted_bytes,measured_collectives")
     for name in mods:
         t0 = time.time()
         try:
@@ -55,7 +55,7 @@ def main() -> None:
                 print(line, flush=True)
         except Exception:
             traceback.print_exc(file=sys.stderr)
-            print(f"{name}_FAILED,0.0,see_stderr,-,-", flush=True)
+            print(f"{name}_FAILED,0.0,see_stderr,-,-,-,-,-", flush=True)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
 
 

@@ -12,6 +12,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q -m "not slow"
 
+echo "== distributed engine multi-device smoke (8 host devices) =="
+# Comm-plan math, shard_map/GSPMD parity, zero-collective block-step HLO
+# audits, plan-matching full-step bytes, ZeRO-1 sharded checkpoint round-trip.
+# The engine/checkpoint tests force the device count in their own
+# subprocesses; the XLA_FLAGS here covers any future in-process additions.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m pytest -q \
+    tests/test_distributed_plan.py \
+    tests/test_distributed_engine.py \
+    tests/test_distributed_checkpoint.py
+
 echo "== quick benchmarks (ns_cost, optimizer_step) =="
 out=$(REPRO_BENCH_ONLY=ns_cost,optimizer_step python -m benchmarks.run --quick)
 echo "$out"

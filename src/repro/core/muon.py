@@ -101,6 +101,7 @@ def muon(
     distribute_full: Optional[tuple] = None,
     bucketing: bool = True,
     ns_backend: Optional[str] = None,
+    comm: Optional[Any] = None,
 ) -> Optimizer:
     """Build the Muon-family optimizer (paper Algorithm 1).
 
@@ -126,6 +127,13 @@ def muon(
         chain per distinct unit shape). False restores per-leaf dispatch.
       ns_backend: NS execution backend name for ``kernels.dispatch``
         ("jnp" | "pallas"); None uses the registry default.
+      comm: optional :class:`repro.distributed.ShardMapEngine`. When set,
+        the orthogonalization of every leaf runs inside one explicit
+        ``shard_map`` region per step — block steps operate directly on the
+        shard-local blocks with zero collectives, full steps schedule one
+        hand-written all-gather per sharded leaf (momentum shards -> full
+        NS -> local slice) — instead of relying on the GSPMD partitioner.
+        Supersedes ``distribute_full``. Numerics match the implicit path.
     """
     lr_full_fn = _as_schedule(lr_full)
     lr_block_fn = _as_schedule(lr_block if lr_block is not None else lr_full)
@@ -221,9 +229,13 @@ def muon(
             scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
             return finish(o, p, scale)
 
-        def bucketed(grads, new_m, params):
-            """One NS chain per shape bucket instead of one per leaf."""
+        def flatten_update_inputs(grads, new_m, params):
+            """Shared prologue: leaves, path keys, NS inputs, block specs."""
             flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+            keys = [
+                tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+                for path, _ in flat
+            ]
             g_leaves = [l for _, l in flat]
             m_leaves = jax.tree.leaves(new_m)
             p_leaves = jax.tree.leaves(params)
@@ -231,12 +243,23 @@ def muon(
                 (g.astype(jnp.float32) + mu * m) if nesterov else m
                 for g, m in zip(g_leaves, m_leaves)
             ]
-            bs_leaves = [
-                bs_by_path.get(
-                    tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-                )
-                for path, _ in flat
-            ]
+            bs_leaves = [bs_by_path.get(key) for key in keys]
+            return treedef, keys, u_leaves, p_leaves, bs_leaves
+
+        def finish_leaves(treedef, u_leaves, o_leaves, p_leaves, bs_leaves):
+            """Shared epilogue: RMS-matched scaling + weight decay + repack."""
+            upd_leaves = []
+            for u, o, p, bs in zip(u_leaves, o_leaves, p_leaves, bs_leaves):
+                m_eff, n_eff = eff_dims(u.shape, bs)
+                scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
+                upd_leaves.append(finish(o, p, scale))
+            return jax.tree_util.tree_unflatten(treedef, upd_leaves)
+
+        def bucketed(grads, new_m, params):
+            """One NS chain per shape bucket instead of one per leaf."""
+            treedef, _, u_leaves, p_leaves, bs_leaves = flatten_update_inputs(
+                grads, new_m, params
+            )
             specs = [
                 None
                 if phase == "full" or bs is None or bs.num_blocks == 1
@@ -271,14 +294,25 @@ def muon(
                 for u, s in zip(u_leaves, specs):
                     merged.append(_orth_full(u) if s is None else o_leaves.pop(0))
                 o_leaves = merged
-            upd_leaves = []
-            for u, o, p, bs in zip(u_leaves, o_leaves, p_leaves, bs_leaves):
-                m_eff, n_eff = eff_dims(u.shape, bs)
-                scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
-                upd_leaves.append(finish(o, p, scale))
-            return jax.tree_util.tree_unflatten(treedef, upd_leaves)
+            return finish_leaves(treedef, u_leaves, o_leaves, p_leaves, bs_leaves)
 
-        if bucketing:
+        def via_comm(grads, new_m, params):
+            """Explicitly-scheduled path: one shard_map region per step.
+
+            The engine gathers/slices by hand and runs NS (bucketed when
+            ``bucketing``) on shard-local data; see distributed/engine.py.
+            """
+            treedef, keys, u_leaves, p_leaves, bs_leaves = flatten_update_inputs(
+                grads, new_m, params
+            )
+            o_leaves = comm.orthogonalize(
+                keys, u_leaves, bs_leaves, _orth, phase=phase, bucketing=bucketing
+            )
+            return finish_leaves(treedef, u_leaves, o_leaves, p_leaves, bs_leaves)
+
+        if comm is not None:
+            updates = via_comm(grads, new_m, params)
+        elif bucketing:
             updates = bucketed(grads, new_m, params)
         else:
             updates = jax.tree_util.tree_map_with_path(

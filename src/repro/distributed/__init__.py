@@ -1,0 +1,28 @@
+"""Distributed MuonBP engine: explicit comm planning, shard_map execution,
+first-class ZeRO-1 state sharding, and HLO auditing. See README.md here."""
+
+from repro.distributed.audit import (
+    AuditResult,
+    assert_matches_plan,
+    audit_compiled,
+    audit_fn,
+    audit_optimizer,
+    parse_collectives,
+)
+from repro.distributed.engine import ShardMapEngine, make_engine
+from repro.distributed.plan import Collective, CommPlan, LeafCommPlan, plan_comm
+
+__all__ = [
+    "assert_matches_plan",
+    "audit_compiled",
+    "audit_fn",
+    "audit_optimizer",
+    "AuditResult",
+    "Collective",
+    "CommPlan",
+    "LeafCommPlan",
+    "make_engine",
+    "parse_collectives",
+    "plan_comm",
+    "ShardMapEngine",
+]

@@ -1,0 +1,206 @@
+"""Post-SPMD HLO audit: measure the collective schedule, check it against plan.
+
+``distributed.plan`` predicts the optimizer's communication; this module
+measures what the compiler actually emitted and asserts the two agree. The
+parser reads post-SPMD HLO text (``compiled.as_text()``) and sums, per
+collective op, the per-device **result**-buffer bytes — the same convention
+``plan.CommPlan`` predicts in, so the comparison is direct.
+
+Improvements over the original regex that lived in ``launch/dryrun.py``
+(which now imports from here): tuple-shaped results (XLA's collective
+combiner merges same-shaped all-gathers into one op with a tuple result)
+have every element counted, and async ``-start`` forms are counted once
+with only their *result* buffers (their tuple also carries the operand
+buffers; ``-done`` consumes the started op and is skipped).
+
+``audit_optimizer`` compiles ``optimizer.update`` in isolation — a train
+step's fwd/bwd collectives would drown the optimizer's — so the measured
+schedule is exactly what the plan prices. ``assert_matches_plan`` is the
+test-facing check: zero collectives on block steps, plan-matching bytes on
+full steps, within a tolerance for stray scalar traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+
+from repro.distributed.plan import CommPlan
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+# "= f32[2,64]{1,0} all-gather(" or "= (f32[2,64]{1,0}, f32[8]{0}) all-gather-start("
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+?\[[\d,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(([^)]*)\)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"%(\S+?)\s*=\s*[^\s]+\s+(\w[\w-]*)\(([^)]*)\)")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+
+# Shape-preserving-ish ops through which constant-ness propagates.
+_CONST_TRANSPARENT = {
+    "broadcast", "call", "reshape", "copy", "transpose", "convert", "bitcast",
+}
+
+
+def _constant_derived(hlo_text: str) -> set[str]:
+    """Names of values that are (broadcasts/reshapes of) compile-time constants.
+
+    The SPMD partitioner sometimes shards a broadcasted scalar (e.g. the
+    momentum coefficient) one way and reshards it with an all-to-all —
+    bytes on the wire that carry zero information. The audit excludes
+    collectives whose every operand is constant-derived so plans compare
+    against *data* movement only.
+    """
+    const: set[str] = set()
+    for m in re.finditer(r"%(\S+?)\s*=\s*\S+\s+constant\(", hlo_text):
+        const.add(m.group(1))
+    for _ in range(3):  # fixpoint over short broadcast/call chains
+        grew = False
+        for m in _DEF_RE.finditer(hlo_text):
+            name, op, args = m.groups()
+            if name in const or op not in _CONST_TRANSPARENT:
+                continue
+            operands = _OPERAND_RE.findall(args)
+            if operands and all(o in const for o in operands):
+                const.add(name)
+                grew = True
+        if not grew:
+            break
+    return const
+
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op in post-SPMD HLO.
+
+    Collectives that only move constant-derived data (see
+    :func:`_constant_derived`) are excluded — they are partitioner artifacts,
+    not part of any communication schedule worth accounting.
+    """
+    const = _constant_derived(hlo_text)
+    out: dict[str, dict] = {}
+    for m in _LINE_RE.finditer(hlo_text):
+        result, op, is_start, operand_str = m.group(1), m.group(2), m.group(3), m.group(4)
+        operands = _OPERAND_RE.findall(operand_str)
+        if operands and all(o in const for o in operands):
+            continue
+        shapes = _SHAPE_RE.findall(result)
+        if is_start and len(shapes) > len(operands):
+            # Async form returns (operands..., results...): count only the
+            # result buffers, matching the sync-op convention.
+            shapes = shapes[len(operands):]
+        nbytes = 0
+        for dtype, dims in shapes:
+            elem = DTYPE_BYTES.get(dtype, 4)
+            for d in dims.split(","):
+                if d:
+                    elem *= int(d)
+            nbytes += elem
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditResult:
+    """Measured collective schedule of one compiled function."""
+
+    collectives: dict  # op -> {"count": int, "bytes": int}
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(v["count"] for v in self.collectives.values())
+
+    def bytes_of(self, op: str) -> int:
+        return self.collectives.get(op, {}).get("bytes", 0)
+
+    def count_of(self, op: str) -> int:
+        return self.collectives.get(op, {}).get("count", 0)
+
+
+def audit_compiled(compiled) -> AuditResult:
+    return AuditResult(collectives=parse_collectives(compiled.as_text()))
+
+
+def audit_fn(fn, *abstract_args, **abstract_kwargs) -> AuditResult:
+    """jit + lower + compile ``fn`` on abstract args and audit its HLO."""
+    compiled = jax.jit(fn).lower(*abstract_args, **abstract_kwargs).compile()
+    return audit_compiled(compiled)
+
+
+def audit_optimizer(optimizer, a_params: Any, a_opt: Any, *, phase: str,
+                    a_grads: Any = None, update_shardings: Any = None) -> AuditResult:
+    """Audit ``optimizer.update`` compiled in isolation for one phase.
+
+    ``a_params``/``a_opt`` are sharded ShapeDtypeStructs (dry-run style);
+    gradients default to the param layout (data-replicated, model-sharded
+    — what the post-allreduce backward hands the optimizer). Outputs are
+    pinned to the layouts they have in the real train step — updates to the
+    param shardings (they are added to the params next), state to its own —
+    otherwise the partitioner is free to pick arbitrary output layouts and
+    the audit measures resharding artifacts instead of the schedule.
+    ``update_shardings`` overrides the update-output pin: under ZeRO-1 the
+    updates legitimately leave the optimizer data-sharded on the lead dim
+    (the apply-time gather is priced by the plan's 'apply' phase, not here).
+    """
+    if a_grads is None:
+        a_grads = a_params
+
+    def update(grads, state, params):
+        return optimizer.update(grads, state, params, phase)
+
+    if update_shardings is None:
+        update_shardings = jax.tree.map(lambda x: x.sharding, a_params)
+    out_shardings = (
+        update_shardings,
+        jax.tree.map(lambda x: x.sharding, a_opt),
+    )
+    compiled = (
+        jax.jit(update, out_shardings=out_shardings)
+        .lower(a_grads, a_opt, a_params)
+        .compile()
+    )
+    return audit_compiled(compiled)
+
+
+def assert_matches_plan(result: AuditResult, plan: CommPlan, phase: str, *,
+                        rel_tol: float = 0.05, abs_slack: int = 4096,
+                        ops: tuple = ("all-gather", "reduce-scatter", "all-to-all")) -> None:
+    """Assert the measured schedule matches the plan's prediction.
+
+    Compares the data-moving gather/scatter ops the plan prices (small
+    all-reduces of scalars/norms are tolerated up to ``abs_slack`` bytes).
+    Raises AssertionError with a side-by-side summary on mismatch.
+    """
+    predicted = plan.predicted(phase)
+    pred_bytes = sum(v["bytes"] for op, v in predicted.items() if op in ops)
+    meas_bytes = sum(result.bytes_of(op) for op in ops)
+    tol = max(rel_tol * max(pred_bytes, 1), abs_slack)
+    if abs(meas_bytes - pred_bytes) > tol:
+        raise AssertionError(
+            f"collective bytes mismatch on {phase!r}: predicted {pred_bytes}, "
+            f"measured {meas_bytes} (tol {tol:.0f})\n"
+            f"  plan: {predicted}\n  hlo:  {result.collectives}"
+        )
+    if pred_bytes == 0 and result.total_bytes > abs_slack:
+        raise AssertionError(
+            f"phase {phase!r} planned zero collectives but HLO moves "
+            f"{result.total_bytes} B: {result.collectives}"
+        )

@@ -1,0 +1,218 @@
+"""Explicitly-scheduled distributed execution of the MuonBP update.
+
+The GSPMD path in ``core/muon.py`` expresses distribution implicitly: block
+steps rely on the compiler noticing that logical blocks coincide with
+shards, and full steps rely on it inserting the momentum gather somewhere
+sensible. That works, but the communication schedule is an emergent property
+of the partitioner — it cannot be asserted, priced, or overlapped. This
+module is the explicit alternative: a ``jax.shard_map`` region per update in
+which every collective is written out by hand, scheduled to match
+``distributed/plan.py`` exactly:
+
+  * **block phase** — the shard-local array on each device *is* the MuonBP
+    block (paper Sec 3: "block = the shard on one device"). The body runs
+    Newton-Schulz directly on it. Zero collectives by construction, not by
+    compiler fortune. Leaves whose block grid is coarser than their shard
+    grid (e.g. replicated params carrying a logical block spec) are blocked
+    by the residual factor locally, so numerics match the GSPMD path
+    bit-for-bit in every configuration.
+  * **full phase** — per sharded leaf: ``lax.all_gather`` the momentum
+    shards over the trailing-dim model axes (tiled), run the full NS
+    redundantly on every rank, and ``dynamic_slice`` the local shard back
+    out. One gather per sharded leaf, nothing else.
+
+Inside the shard-local region the update composes with the bucketed/fused
+NS backend from ``core/bucketing.py`` + ``kernels/dispatch.py``: all leaves
+enter ONE shard_map call per step, and the body concat-packs them into one
+batched NS chain per distinct local shape — everything is device-local
+there, so even block steps get maximum batching (the GSPMD path must
+stack-pack to avoid resharding; the shard_map body has no such constraint).
+
+ZeRO-1 composes transparently: the engine's in/out specs are the *momentum*
+specs (``sharding.specs.momentum_spec``), so a data-sharded leading stack
+dim simply makes the local NS batch smaller — full-step gathers move
+1/data_size of the bytes and each rank orthogonalizes only its own layers.
+
+``core.muon.muon(..., comm=engine)`` routes the update through
+:meth:`ShardMapEngine.orthogonalize`; the engine supersedes the
+``distribute_full`` GSPMD option when both are set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import blocking
+from repro.core import bucketing as bucketing_lib
+from repro.sharding import specs as sh
+from repro.sharding.specs import spec_entry_names as _names
+from repro.sharding.specs import spec_entry_size as _factor
+
+PathKey = tuple[str, ...]
+
+
+def path_key(path) -> PathKey:
+    return tuple(sh.path_names(path))
+
+
+def _entries(spec: P, ndim: int) -> list:
+    ent = list(spec)
+    return ent + [None] * (ndim - len(ent))
+
+
+def _gather_trailing(x: jax.Array, spec: P, sizes: dict[str, int]) -> jax.Array:
+    """Tiled all-gather of the trailing (matrix) dims, dim -2 then -1.
+
+    Tuple spec entries gather minor axis first so the concatenation order
+    reproduces PartitionSpec's major-to-minor global layout.
+    """
+    entries = _entries(spec, x.ndim)
+    for dim, entry in ((x.ndim - 2, entries[-2]), (x.ndim - 1, entries[-1])):
+        for name in reversed(_names(entry)):
+            if sizes.get(name, 1) > 1:
+                x = jax.lax.all_gather(x, name, axis=dim, tiled=True)
+    return x
+
+
+def _slice_trailing(x: jax.Array, spec: P, sizes: dict[str, int]) -> jax.Array:
+    """Inverse of :func:`_gather_trailing`: take this rank's shard (local)."""
+    entries = _entries(spec, x.ndim)
+    for dim, entry in ((x.ndim - 2, entries[-2]), (x.ndim - 1, entries[-1])):
+        factor = _factor(entry, sizes)
+        if factor == 1:
+            continue
+        idx = jnp.zeros((), jnp.int32)
+        for name in _names(entry):  # major-to-minor linear index
+            idx = idx * sizes.get(name, 1) + jax.lax.axis_index(name)
+        local = x.shape[dim] // factor
+        x = jax.lax.dynamic_slice_in_dim(x, idx * local, local, axis=dim)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMapEngine:
+    """shard_map executor for the MuonBP update on one mesh.
+
+    ``uspec_by_path`` maps param-tree path keys to the *momentum* spec of
+    that leaf (param spec, plus the ZeRO-1 lead-dim data sharding when
+    enabled) — the sharding the NS input ``u = g + mu*m`` arrives in and
+    the sharding the orthogonalized update leaves in.
+    """
+
+    mesh: Mesh
+    uspec_by_path: dict
+
+    @property
+    def axis_sizes(self) -> dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def spec_for(self, key: PathKey, ndim: int) -> P:
+        spec = self.uspec_by_path.get(key)
+        if spec is None:
+            return P(*(None,) * ndim)
+        return P(*_entries(spec, ndim)[:ndim])
+
+    def orthogonalize(
+        self,
+        keys: Sequence[PathKey],
+        u_leaves: Sequence[jax.Array],
+        block_specs: Sequence[Optional[blocking.BlockSpec2D]],
+        orth: Callable[[jax.Array], jax.Array],
+        *,
+        phase: str,
+        bucketing: bool = True,
+    ) -> list[jax.Array]:
+        """Orthogonalize every leaf in one shard_map region.
+
+        ``orth`` is the leaf-level Newton-Schulz entry point (already bound
+        to steps/coeffs/backend); it runs on shard-local data only.
+        """
+        if not u_leaves:
+            return []
+        sizes = self.axis_sizes
+        specs = [self.spec_for(k, u.ndim) for k, u in zip(keys, u_leaves)]
+
+        gathers: list[bool] = []
+        residual: list[Optional[blocking.BlockSpec2D]] = []
+        for spec, u, bs in zip(specs, u_leaves, block_specs):
+            entries = _entries(spec, u.ndim)
+            r, c = _factor(entries[-2], sizes), _factor(entries[-1], sizes)
+            unblocked = bs is None or bs.num_blocks == 1
+            if phase == "full" or unblocked:
+                gathers.append(r * c > 1)
+                residual.append(None)
+            else:
+                # Block step: the shard is the block, up to a residual grid
+                # when the logical block spec is finer than the shard grid.
+                if bs.r % r or bs.c % c:
+                    raise ValueError(
+                        f"block grid {bs} incompatible with shard grid ({r}, {c})"
+                    )
+                rr, rc = bs.r // r, bs.c // c
+                gathers.append(False)
+                residual.append(blocking.BlockSpec2D(rr, rc) if rr * rc > 1 else None)
+
+        def body(*xs):
+            ins = [
+                _gather_trailing(x, spec, sizes) if g else x
+                for x, spec, g in zip(xs, specs, gathers)
+            ]
+            if bucketing:
+                # Everything in the body is device-local, so concat-pack
+                # unconditionally: one batched NS chain per local shape.
+                outs = bucketing_lib.bucketed_orthogonalize(
+                    ins, residual, orth, mode="concat"
+                )
+            else:
+                outs = []
+                for x, rbs in zip(ins, residual):
+                    if rbs is not None:
+                        x = blocking.unpartition_blocks(
+                            orth(blocking.partition_blocks(x, rbs)), rbs
+                        )
+                    else:
+                        x = orth(x)
+                    outs.append(x)
+            return tuple(
+                _slice_trailing(o, spec, sizes) if g else o
+                for o, spec, g in zip(outs, specs, gathers)
+            )
+
+        fn = shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=tuple(specs),
+            out_specs=tuple(specs),
+            check_rep=False,
+        )
+        return list(fn(*u_leaves))
+
+
+def make_engine(params: Any, pspecs: Any, mesh: Mesh, *, zero1: bool = False,
+                zero1_axis: str = "data") -> ShardMapEngine:
+    """Build a :class:`ShardMapEngine` from the param tree + PartitionSpecs.
+
+    ``params`` may be arrays or ShapeDtypeStructs (shapes only are read).
+    With ``zero1`` the engine's update specs carry the ZeRO-1 lead-dim data
+    sharding from ``sharding.specs.momentum_spec`` — pair it with
+    ``distributed.zero1`` so the momentum actually lives in those shards.
+    """
+    sizes = sh.mesh_axis_sizes(mesh)
+    uspecs: dict[PathKey, P] = {}
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    spec_leaves = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+    if len(flat_p) != len(spec_leaves):
+        raise ValueError(
+            f"params/pspecs leaf counts differ: {len(flat_p)}/{len(spec_leaves)}"
+        )
+    for (path, leaf), spec in zip(flat_p, spec_leaves):
+        uspecs[path_key(path)] = sh.momentum_spec(
+            spec, tuple(leaf.shape), sizes, zero1=zero1, zero1_axis=zero1_axis
+        )
+    return ShardMapEngine(mesh=mesh, uspec_by_path=uspecs)

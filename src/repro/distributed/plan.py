@@ -1,0 +1,226 @@
+"""Communication planner: predicted collectives for the MuonBP update.
+
+The paper's systems claim (Sec 3.2) is a statement about the optimizer's
+*communication schedule*: block steps touch only shard-local data (zero
+optimizer collectives), full steps pay one momentum gather per sharded
+matrix (amortized 1/P of Muon's traffic). This module turns that claim into
+an explicit, testable artifact — given a mesh and the parameter
+``PartitionSpec``s from ``sharding/specs.py`` it emits a per-leaf
+:class:`LeafCommPlan` and a :class:`CommPlan` with a ``predicted_bytes``
+accounting API. The HLO audit (``distributed/audit.py``) compares the plan
+against the post-SPMD collective schedule the compiler actually emitted;
+``distributed/engine.py`` is the execution path built to *match* the plan.
+
+Byte convention: predicted bytes of a collective are the bytes of its
+per-device **result** buffer — the same convention ``audit.parse_collectives``
+uses when summing post-SPMD HLO, so plan and measurement compare directly.
+All NS inputs are fp32 (momentum dtype), hence 4 bytes/element.
+
+Three accounted phases:
+
+  * ``'block'``  — block-periodic step. Shard-local by construction: every
+    NS unit is exactly the shard on one device, so the plan predicts zero
+    collectives (a sharded leaf with no usable block grid is the exception;
+    it is orthogonalized fully and pays the gather every step).
+  * ``'full'``   — periodic full orthogonalization. Per sharded muon leaf:
+    all-gather the momentum shards over the trailing-dim model axes, run
+    the full NS redundantly, slice the local shard back out (the slice is
+    local — no collective).
+  * ``'apply'``  — ZeRO-1 only: updates leave the optimizer sharded over
+    the data axis on the leading stack dim, and applying them to the
+    data-replicated params costs one all-gather per step whose result is
+    the update in the *param* layout (still model-sharded on the trailing
+    dims). This is outside ``optimizer.update`` (it happens at
+    ``params + updates``) but is the price of the d-fold optimizer-state
+    HBM cut, so the plan accounts it explicitly instead of letting it
+    hide in fwd/bwd traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.blocking import BlockSpec2D, block_spec_from_partition
+from repro.core.combine import default_label_fn
+from repro.sharding import specs as sh
+from repro.sharding.specs import path_str as _path_str
+from repro.sharding.specs import spec_entry_names as _names
+from repro.sharding.specs import spec_entry_size as _factor
+
+PHASES = ("block", "full", "apply")
+FP32_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """One predicted collective: op name, mesh axes, per-device result bytes."""
+
+    op: str                 # 'all-gather' | 'reduce-scatter' | ...
+    axes: tuple[str, ...]   # mesh axes it runs over
+    bytes: int              # per-device result-buffer bytes (HLO convention)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafCommPlan:
+    """Predicted optimizer communication for one parameter leaf."""
+
+    path: str
+    shape: tuple
+    spec: P                       # param partition (normalized to ndim)
+    label: str                    # 'muon' | 'adamw' | ...
+    zero1_factor: int             # data-axis shard factor on the lead dim
+    block: tuple[Collective, ...]
+    full: tuple[Collective, ...]
+    apply: tuple[Collective, ...]
+
+    def collectives(self, phase: str) -> tuple[Collective, ...]:
+        if phase not in PHASES:
+            raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
+        return getattr(self, phase)
+
+    def predicted_bytes(self, phase: str) -> int:
+        return sum(c.bytes for c in self.collectives(phase))
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """Per-leaf communication plan for one optimizer step on one mesh."""
+
+    axis_sizes: dict[str, int]
+    leaves: tuple[LeafCommPlan, ...]
+
+    def predicted_bytes(self, phase: str) -> int:
+        return sum(leaf.predicted_bytes(phase) for leaf in self.leaves)
+
+    def predicted(self, phase: str) -> dict[str, dict[str, int]]:
+        """Aggregate {op: {count, bytes}} — the shape parse_collectives emits."""
+        out: dict[str, dict[str, int]] = {}
+        for leaf in self.leaves:
+            for c in leaf.collectives(phase):
+                rec = out.setdefault(c.op, {"count": 0, "bytes": 0})
+                rec["count"] += 1
+                rec["bytes"] += c.bytes
+        return out
+
+    def summary(self) -> str:
+        lines = [f"CommPlan over mesh {self.axis_sizes}:"]
+        for phase in PHASES:
+            agg = self.predicted(phase)
+            total = self.predicted_bytes(phase)
+            lines.append(f"  {phase:5s}: {total} B  {agg if agg else '(no collectives)'}")
+        return "\n".join(lines)
+
+
+def _plan_leaf(path: str, shape: tuple, spec: P, label: str,
+               sizes: dict[str, int], *, zero1: bool, zero1_axis: str,
+               block_spec=None, has_block_specs: bool = False) -> LeafCommPlan:
+    uspec = sh.momentum_spec(spec, shape, sizes, zero1=zero1,
+                             zero1_axis=zero1_axis, label=label)
+    entries = list(uspec) + [None] * (len(shape) - len(uspec))
+    pspec_entries = list(spec) if spec is not None else []
+    pspec_entries += [None] * (len(shape) - len(pspec_entries))
+    # ZeRO-1 factor = the data sharding momentum_spec ADDED on the lead dim
+    # (a param already sharded there, e.g. vocab-parallel embed, is not it).
+    zero1_added = bool(shape) and entries[0] != pspec_entries[0]
+    d = _factor(entries[0], sizes) if zero1_added else 1
+    elems = math.prod(shape) if shape else 1
+
+    full: list[Collective] = []
+    block: list[Collective] = []
+    apply_: list[Collective] = []
+
+    # Trailing-dim shard factors from the PARAM spec (the MuonBP block grid
+    # for muon leaves; for 2-D AdamW leaves the momentum's ZeRO-1 lead-dim
+    # sharding coincides with dim -2 and must not count as a trailing factor).
+    r = _factor(pspec_entries[-2], sizes) if len(shape) >= 2 else 1
+    c = _factor(pspec_entries[-1], sizes) if len(shape) >= 1 else 1
+
+    if label == "muon" and len(shape) >= 2:
+        if r * c > 1:
+            # Full step: sequential tiled all-gathers over dim -2 then -1,
+            # mirroring engine._gather_trailing. Result bytes grow as each
+            # dim fills in; the final slice-back is local (no collective).
+            local = elems // (d * r * c)
+            for dim_factor, entry in ((r, pspec_entries[-2]), (c, pspec_entries[-1])):
+                if dim_factor > 1:
+                    local *= dim_factor
+                    full.append(Collective("all-gather", _names(entry), local * FP32_BYTES))
+            # Block step: zero collectives iff the leaf HAS a usable block
+            # grid; an unblocked-but-sharded leaf is orthogonalized fully
+            # every step and pays the same gathers (the engine's condition).
+            # The grid is the optimizer's actual block_specs entry when the
+            # caller passed the tree, else re-derived from the layout.
+            bs = (
+                block_spec
+                if has_block_specs
+                else block_spec_from_partition(uspec, shape, sizes)
+            )
+            if bs is None or bs.num_blocks == 1:
+                block = list(full)
+
+    if d > 1:
+        # ZeRO-1 apply-time gather: updates are data-sharded on the lead
+        # dim; params are data-replicated. One all-gather per leaf per step
+        # whose result stays model-sharded on the trailing dims (per-device
+        # result bytes divide by the trailing shard factors).
+        apply_.append(Collective(
+            "all-gather", _names(entries[0]), elems // (r * c) * FP32_BYTES))
+
+    return LeafCommPlan(
+        path=path, shape=tuple(shape), spec=P(*entries), label=label,
+        zero1_factor=d, block=tuple(block), full=tuple(full), apply=tuple(apply_),
+    )
+
+
+def plan_comm(params: Any, pspecs: Any, mesh: Mesh, *, labels: Any = None,
+              block_specs: Any = None, zero1: bool = False,
+              zero1_axis: str = "data") -> CommPlan:
+    """Build the :class:`CommPlan` for one optimizer step.
+
+    Args:
+      params: param pytree (arrays or ShapeDtypeStructs — shapes only).
+      pspecs: matching pytree of PartitionSpecs (``sharding.specs.param_specs``).
+      mesh: the mesh (only axis names/sizes are read; fake meshes work).
+      labels: optional pytree of optimizer labels ('muon'/'adamw'); defaults
+        to ``core.combine.default_label_fn`` applied per leaf.
+      block_specs: optional pytree of ``BlockSpec2D`` — the SAME tree handed
+        to the optimizer. When given, block-step predictions use it (a muon
+        leaf with no usable grid pays its full-step gathers every step,
+        exactly the engine's condition); when omitted the grid is re-derived
+        from the layout, which is only correct for the standard
+        blocks-follow-shards configuration (``sharding.specs.block_specs_for``).
+      zero1: account first-class ZeRO-1 momentum sharding (lead stack dim
+        over ``zero1_axis``; see ``sharding.specs.momentum_spec``).
+    """
+    sizes = sh.mesh_axis_sizes(mesh)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    spec_leaves = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+    if labels is not None:
+        label_leaves = jax.tree.leaves(labels)
+    else:
+        label_leaves = [default_label_fn(_path_str(path), leaf) for path, leaf in flat_p]
+    if not (len(flat_p) == len(spec_leaves) == len(label_leaves)):
+        raise ValueError(
+            f"params/pspecs/labels leaf counts differ: "
+            f"{len(flat_p)}/{len(spec_leaves)}/{len(label_leaves)}"
+        )
+    bs_by_path: dict[str, Any] = {}
+    if block_specs is not None:
+        for path, bs in jax.tree_util.tree_flatten_with_path(
+            block_specs,
+            is_leaf=lambda x: x is None or isinstance(x, BlockSpec2D),
+        )[0]:
+            bs_by_path[_path_str(path)] = bs
+    leaves = tuple(
+        _plan_leaf(_path_str(path), tuple(leaf.shape), spec, label, sizes,
+                   zero1=zero1, zero1_axis=zero1_axis,
+                   block_spec=bs_by_path.get(_path_str(path)),
+                   has_block_specs=block_specs is not None)
+        for (path, leaf), spec, label in zip(flat_p, spec_leaves, label_leaves)
+    )
+    return CommPlan(axis_sizes=sizes, leaves=leaves)

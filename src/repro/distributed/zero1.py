@@ -1,0 +1,136 @@
+"""First-class ZeRO-1 optimizer-state sharding over the data axis.
+
+Before this module, ZeRO-1 existed only as a sharding *annotation* bolted
+onto abstract optimizer state in ``launch/dryrun.py`` — nothing initialized
+real momentum sharded, nothing kept it sharded through an update, and
+checkpoint restore silently replicated it. Here it is a subsystem:
+
+  * :func:`opt_specs` / :func:`opt_shardings` — derive the optimizer-state
+    layout from the param layout by path-suffix matching (momentum trees
+    mirror the param tree somewhere inside ``OptState``/``CombinedState``).
+    The ZeRO-1 rule lives in ``sharding.specs.momentum_spec``: shard the
+    *leading dim* over ``data`` when divisible. For muon leaves only a
+    leading stack dim (ndim >= 3) qualifies — the trailing matrix dims are
+    the MuonBP blocks, and sharding them over data would destroy the
+    zero-collective block step. Coordinate-wise (AdamW) state has no such
+    constraint, so the large 2-D embedding/unembedding mu+nu shard too.
+  * :func:`attach` — the ShapeDtypeStruct variant for dry-run lowering
+    (replaces the annotation-only branch that lived in dryrun).
+  * :func:`shard_state` — device_put real optimizer state into its shards
+    (init-time placement for real runs).
+  * :func:`constrain` — ``with_sharding_constraint`` the fresh state inside
+    a jitted step so the compiler cannot silently replicate it.
+
+Communication consequences (accounted by ``distributed.plan``): block steps
+stay shard-local — the momentum update ``m <- mu*m + g`` slices the
+data-replicated gradient locally, and NS runs on the rank's own layers.
+Full-orthogonalization steps gather only over the *model* axis, and only
+1/data_size of the bytes, since each rank orthogonalizes its own layer
+shard. The one recurring cost is the apply-time all-gather of the
+data-sharded updates onto the data-replicated params — params-sized, once
+per step, the standard ZeRO-1 trade for a data_size-fold state-HBM cut.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import specs as sh
+from repro.sharding.specs import path_str as _key_str
+
+ZERO1_AXIS = "data"
+
+
+def _param_spec_index(a_params: Any, pspecs: Any = None) -> dict[str, tuple]:
+    """path string -> (spec, shape, optimizer label) for every param leaf.
+
+    ``pspecs`` may be omitted when ``a_params`` leaves carry ``.sharding``
+    (ShapeDtypeStructs or committed jax.Arrays). The label (muon/adamw,
+    via ``core.combine.default_label_fn``) decides which ZeRO-1 rule
+    applies in ``sharding.specs.momentum_spec``.
+    """
+    from repro.core.combine import default_label_fn
+
+    flat_p = jax.tree_util.tree_flatten_with_path(a_params)[0]
+    if pspecs is not None:
+        spec_leaves = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+    else:
+        spec_leaves = [leaf.sharding.spec for _, leaf in flat_p]
+    return {
+        _key_str(path): (spec, tuple(leaf.shape),
+                         default_label_fn(_key_str(path), leaf))
+        for (path, leaf), spec in zip(flat_p, spec_leaves)
+    }
+
+
+def _match_suffix(keys: list[str], index: dict[str, tuple]):
+    """Longest param-path suffix of an opt-state path present in the index."""
+    for start in range(len(keys)):
+        cand = "/".join(keys[start:])
+        if cand in index:
+            return index[cand]
+    return None
+
+
+def opt_specs(a_opt: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
+              zero1: bool = False, axis: str = ZERO1_AXIS) -> Any:
+    """Pytree of PartitionSpecs matching ``a_opt``.
+
+    Momentum/mu/nu subtrees mirror the param layout; with ``zero1`` they
+    additionally shard the leading stack dim over ``axis`` (see
+    ``sharding.specs.momentum_spec``). Leaves with no param match (step
+    counters) are replicated.
+    """
+    sizes = sh.mesh_axis_sizes(mesh)
+    index = _param_spec_index(a_params, pspecs)
+
+    def spec(path, leaf):
+        hit = _match_suffix(sh.path_names(path), index)
+        if hit is None or len(hit[1]) != leaf.ndim:
+            return P(*(None,) * leaf.ndim)
+        pspec, shape, label = hit
+        return sh.momentum_spec(pspec, shape, sizes, zero1=zero1,
+                                zero1_axis=axis, label=label)
+
+    return jax.tree_util.tree_map_with_path(spec, a_opt)
+
+
+def opt_shardings(a_opt: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
+                  zero1: bool = False, axis: str = ZERO1_AXIS) -> Any:
+    """Pytree of NamedShardings matching ``a_opt`` (see :func:`opt_specs`)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        opt_specs(a_opt, a_params, mesh, pspecs=pspecs, zero1=zero1, axis=axis),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def attach(a_opt: Any, a_params: Any, mesh: Mesh, *, zero1: bool = False,
+           axis: str = ZERO1_AXIS) -> Any:
+    """ShapeDtypeStructs for abstract optimizer state with shardings attached.
+
+    Dry-run/perf entry point (the old ``dryrun._attach_opt_shardings``).
+    """
+    shardings = opt_shardings(a_opt, a_params, mesh, zero1=zero1, axis=axis)
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        a_opt, shardings,
+    )
+
+
+def shard_state(opt_state: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
+                zero1: bool = True, axis: str = ZERO1_AXIS) -> Any:
+    """device_put real optimizer state into its (ZeRO-1) shards."""
+    shardings = opt_shardings(opt_state, a_params, mesh, pspecs=pspecs,
+                              zero1=zero1, axis=axis)
+    return jax.tree.map(jax.device_put, opt_state, shardings)
+
+
+def constrain(opt_state: Any, shardings: Optional[Any]) -> Any:
+    """Pin fresh optimizer state to its shardings inside a jitted step."""
+    if shardings is None:
+        return opt_state
+    return jax.lax.with_sharding_constraint(opt_state, shardings)

@@ -29,7 +29,6 @@ Usage:
 import argparse
 import functools
 import json
-import re
 import time
 import traceback
 
@@ -40,6 +39,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS, SHAPES, get_config, get_shape, shape_applies
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import adamw, combine, label_tree, muon
+from repro.distributed import make_engine, parse_collectives  # noqa: F401 (re-export)
+from repro.distributed import zero1 as zero1_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import decode_step, init_params, prefill
 from repro.models.transformer import init_cache
@@ -47,30 +48,6 @@ from repro.sharding import specs as sh
 from repro.training.train_step import TrainState, train_step
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
-
-COLLECTIVE_RE = re.compile(
-    r"=\s*(\S+?)\[([\d,]*)\]\S*\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-)
-
-DTYPE_BYTES = {
-    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
-    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
-}
-
-
-def parse_collectives(hlo_text: str) -> dict:
-    """Sum per-device result bytes of every collective op in post-SPMD HLO."""
-    out: dict[str, dict] = {}
-    for m in COLLECTIVE_RE.finditer(hlo_text):
-        dtype, dims, op = m.group(1), m.group(2), m.group(3)
-        nbytes = DTYPE_BYTES.get(dtype, 4)
-        for d in dims.split(","):
-            if d:
-                nbytes *= int(d)
-        rec = out.setdefault(op, {"count": 0, "bytes": 0})
-        rec["count"] += 1
-        rec["bytes"] += nbytes
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -143,14 +120,15 @@ def abstract_cache(cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16
     )
 
 
-def make_optimizer(cfg: ModelConfig, mesh, a_params, pspecs, period=5, distribute_full=None):
+def make_optimizer(cfg: ModelConfig, mesh, a_params, pspecs, period=5,
+                   distribute_full=None, comm=None):
     labels = label_tree(a_params)
     bspecs = sh.block_specs_for(a_params, pspecs, mesh)
     # Only pass block specs for muon-managed leaves (BlockSpec pytree must
     # match the masked tree; mask non-muon leaves to BlockSpec(1,1)).
     opt_muon = muon(1e-3, 1e-3, period=period, block_specs=jax.tree.map(
         lambda l, b: b if l == "muon" else None, labels, bspecs),
-        distribute_full=distribute_full)
+        distribute_full=distribute_full, comm=comm)
     return combine({"muon": opt_muon, "adamw": adamw(3e-4)}, labels)
 
 
@@ -165,25 +143,38 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
       distribute_full: bool — layer-distributed full-step NS over 'data'
       accum_steps: int      — gradient-accumulation microbatching
       ring_cache: bool      — window-sized ring KV cache for SWA decode
+      engine: str           — 'shard_map' routes the optimizer through the
+                              explicit distributed engine (distributed/)
+      zero1: bool           — first-class ZeRO-1 momentum sharding
     """
     v = variant or {}
     if v.get("flash_block_k"):
         ctx = ctx._replace(flash_block_k=int(v["flash_block_k"]))
     if shape.kind == "train":
         a_params, pspecs = abstract_params(cfg, mesh, jnp.float32)
+        zero1 = bool(v.get("zero1"))
         dist = (mesh, "data") if v.get("distribute_full") else None
+        comm = (
+            make_engine(a_params, pspecs, mesh, zero1=zero1)
+            if v.get("engine") == "shard_map" else None
+        )
         optimizer = make_optimizer(cfg, mesh, a_params, pspecs, period=period,
-                                   distribute_full=dist)
+                                   distribute_full=dist, comm=comm)
         a_opt = jax.eval_shape(optimizer.init, a_params)
         a_opt = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a_opt)
         # momentum trees: reuse param shardings by structure-matching paths
-        a_opt = _attach_opt_shardings(a_opt, a_params, mesh, zero1=bool(v.get("zero1")))
+        a_opt = _attach_opt_shardings(a_opt, a_params, mesh, zero1=zero1)
+        opt_shardings = (
+            zero1_lib.opt_shardings(a_opt, a_params, mesh, zero1=True)
+            if zero1 else None
+        )
         a_state = TrainState(params=a_params, opt_state=a_opt,
                              step=jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())))
         batch = input_specs(cfg, shape, mesh)
         step = functools.partial(train_step, cfg=cfg, optimizer=optimizer, ctx=ctx,
                                  phase=phase, accum_steps=v.get("accum_steps", 1),
-                                 bf16_grads=bool(v.get("bf16_grads")))
+                                 bf16_grads=bool(v.get("bf16_grads")),
+                                 opt_shardings=opt_shardings)
         return jax.jit(step, donate_argnums=(0,)).lower(a_state, batch)
     if shape.kind == "prefill":
         a_params, _ = abstract_params(cfg, mesh, jnp.bfloat16)
@@ -319,40 +310,12 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False, phase: s
 
 
 def _attach_opt_shardings(a_opt, a_params, mesh, zero1: bool = False):
-    """Momentum/mu/nu trees mirror the param tree; give them param shardings.
+    """Attach optimizer-state shardings (kept as a thin back-compat shim).
 
-    ``zero1``: additionally shard each state tensor's leading (layer-stack)
-    dim over the 'data' axis when divisible — ZeRO-1 optimizer-state
-    partitioning on top of tensor parallelism. GSPMD then slices gradients
-    locally (they are already data-replicated post-allreduce) and
-    all-gathers the updates at apply time, trading one params-sized gather
-    per step for a data_size-fold cut in optimizer-state HBM.
+    The real logic — param-layout mirroring plus first-class ZeRO-1
+    lead-dim sharding — lives in ``repro.distributed.zero1``.
     """
-    param_shardings = jax.tree.map(lambda x: x.sharding, a_params)
-    flat_shard = {  # path string -> sharding
-        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path): s
-        for path, s in jax.tree_util.tree_flatten_with_path(param_shardings)[0]
-    }
-    data_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
-
-    def attach(path, leaf):
-        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
-        # find the param-path suffix inside the opt-state path
-        for start in range(len(keys)):
-            cand = "/".join(keys[start:])
-            if cand in flat_shard:
-                shard = flat_shard[cand]
-                if zero1 and leaf.ndim >= 2:
-                    spec = list(shard.spec) + [None] * (leaf.ndim - len(shard.spec))
-                    if spec[0] is None and leaf.shape[0] % data_size == 0:
-                        spec[0] = "data"
-                        shard = NamedSharding(mesh, P(*spec))
-                return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=shard)
-        return jax.ShapeDtypeStruct(
-            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P(*(None,) * leaf.ndim))
-        )
-
-    return jax.tree_util.tree_map_with_path(attach, a_opt)
+    return zero1_lib.attach(a_opt, a_params, mesh, zero1=zero1)
 
 
 # ---------------------------------------------------------------------------

@@ -33,7 +33,11 @@ def main():
     ap.add_argument("--ring-cache", action="store_true")
     ap.add_argument("--kv-seq-shard", action="store_true")
     ap.add_argument("--flash-block-k", type=int, default=0)
-    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--zero1", action="store_true",
+                    help="first-class ZeRO-1 momentum sharding (distributed.zero1)")
+    ap.add_argument("--engine", default="gspmd", choices=["gspmd", "shard_map"],
+                    help="optimizer comm engine: implicit GSPMD or the explicit "
+                         "shard_map engine (distributed.engine)")
     ap.add_argument("--bf16-grads", action="store_true")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -58,6 +62,8 @@ def main():
         variant["flash_block_k"] = args.flash_block_k
     if args.zero1:
         variant["zero1"] = True
+    if args.engine != "gspmd":
+        variant["engine"] = args.engine
     if args.bf16_grads:
         variant["bf16_grads"] = True
 

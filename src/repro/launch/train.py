@@ -35,12 +35,13 @@ from repro.training.train_step import init_train_state, make_train_step_fns
 
 
 def build_optimizer(name, params, *, lr, adam_lr, period, schedule_fn=None,
-                    block_specs=None, rank=64, weight_decay=0.1, engine=None):
+                    block_specs=None, rank=64, weight_decay=0.1, engine=None,
+                    comm=None):
     labels = label_tree(params)
     lr_s = schedule_fn(lr) if schedule_fn else lr
     adam_s = schedule_fn(adam_lr) if schedule_fn else adam_lr
     engine = engine if engine is not None else NSEngineConfig.from_env()
-    ns_kw = dict(bucketing=engine.bucketing, ns_backend=engine.backend)
+    ns_kw = dict(bucketing=engine.bucketing, ns_backend=engine.backend, comm=comm)
     if name == "adamw":
         return combine({"adamw": adamw(adam_s, weight_decay=weight_decay)},
                        jax.tree.map(lambda _: "adamw", labels)), None
@@ -79,6 +80,11 @@ def main():
                     help="NS execution backend (default: REPRO_NS_BACKEND or jnp)")
     ap.add_argument("--no-ns-bucketing", action="store_true",
                     help="disable shape-bucketed batched NS dispatch")
+    ap.add_argument("--comm-engine", default="gspmd", choices=["gspmd", "shard_map"],
+                    help="optimizer comm engine: implicit GSPMD or the explicit "
+                         "shard_map engine (repro.distributed)")
+    ap.add_argument("--zero1", action="store_true",
+                    help="shard optimizer state over the data axis (ZeRO-1)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
@@ -109,14 +115,27 @@ def main():
         engine = dataclasses.replace(engine, backend=args.ns_backend)
     if args.no_ns_bucketing:
         engine = dataclasses.replace(engine, bucketing=False)
+    from repro.distributed import make_engine
+    from repro.distributed import zero1 as zero1_lib
+
+    comm = (
+        make_engine(params, pspecs, mesh, zero1=args.zero1)
+        if args.comm_engine == "shard_map" else None
+    )
     optimizer, period = build_optimizer(
         args.optimizer, params, lr=args.lr, adam_lr=args.adam_lr,
         period=args.period, schedule_fn=sched, block_specs=bspecs,
-        engine=engine,
+        engine=engine, comm=comm,
     )
 
     state = init_train_state(params, optimizer)
-    fns = make_train_step_fns(cfg, optimizer, ctx)
+    opt_shardings = None
+    if args.zero1:
+        state = state._replace(opt_state=zero1_lib.shard_state(
+            state.opt_state, params, mesh, pspecs=pspecs))
+        opt_shardings = zero1_lib.opt_shardings(
+            state.opt_state, params, mesh, pspecs=pspecs, zero1=True)
+    fns = make_train_step_fns(cfg, optimizer, ctx, opt_shardings=opt_shardings)
     pipe = iter(SyntheticLM(cfg, args.batch, args.seq, seed=args.seed))
 
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

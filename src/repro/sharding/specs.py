@@ -88,6 +88,31 @@ def _path_names(path) -> list[str]:
     return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
 
 
+def path_names(path) -> list[str]:
+    """Stringified pytree path components (shared across plan/engine/zero1)."""
+    return _path_names(path)
+
+
+def path_str(path) -> str:
+    """Canonical 'a/b/c' key for a pytree path."""
+    return "/".join(_path_names(path))
+
+
+def spec_entry_names(entry) -> tuple:
+    """Mesh axis names of one PartitionSpec entry (None -> ())."""
+    if entry is None:
+        return ()
+    return tuple(entry) if isinstance(entry, tuple) else (entry,)
+
+
+def spec_entry_size(entry, sizes: dict[str, int]) -> int:
+    """Total shard factor of one PartitionSpec entry on a mesh."""
+    size = 1
+    for name in spec_entry_names(entry):
+        size *= sizes.get(name, 1)
+    return size
+
+
 def param_specs(params, cfg: ModelConfig, mesh: Mesh):
     """Pytree of PartitionSpec matching ``params``."""
     sizes = mesh_axis_sizes(mesh)
@@ -172,6 +197,31 @@ def block_specs_for(params, specs, mesh: Mesh):
     return jax.tree.map(
         lambda p, s: block_spec_from_partition(s, p.shape, sizes), params, specs
     )
+
+
+def momentum_spec(spec: Optional[P], shape, mesh_axis_sizes: dict[str, int], *,
+                  zero1: bool = False, zero1_axis: str = "data",
+                  label: str = "muon") -> P:
+    """Optimizer-state PartitionSpec for a param with spec ``spec``.
+
+    Mirrors the param's layout; with ``zero1`` the *leading dim* is
+    additionally sharded over ``zero1_axis`` when it is currently unsharded
+    and the axis size divides it. For ``label == "muon"`` leaves only a
+    leading *stack* dim (ndim >= 3) qualifies: the trailing two (matrix)
+    dims define the MuonBP blocks, and splitting them across data ranks
+    would turn zero-collective block steps into gathers. Coordinate-wise
+    optimizer state (any other label, e.g. the large embedding/unembedding
+    AdamW mu/nu) has no such constraint, so 2-D leaves shard their leading
+    dim too.
+    """
+    entries = list(spec) if spec is not None else []
+    entries += [None] * (len(shape) - len(entries))
+    min_ndim = 3 if label == "muon" else 2
+    if zero1 and len(shape) >= min_ndim and entries[0] is None:
+        d = mesh_axis_sizes.get(zero1_axis, 1)
+        if d > 1 and shape[0] % d == 0:
+            entries[0] = zero1_axis
+    return P(*entries)
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,13 @@
 Host-side (device_get) save with sharding-agnostic restore: on load, arrays
 are device_put with whatever shardings the caller provides, so a checkpoint
 written on one mesh restores onto another (or onto CPU).
+
+Sharded optimizer state (ZeRO-1): save() gathers each momentum shard into a
+full host array; restore() re-applies the shardings passed as
+``opt_shardings`` — derive them with ``distributed.zero1.opt_shardings`` so
+the momentum lands back in its data-axis shards instead of replicated.
+Sharding leaves may be NamedShardings, or ShapeDtypeStructs / arrays
+carrying ``.sharding`` (e.g. the ``distributed.zero1.attach`` output).
 """
 
 from __future__ import annotations
@@ -23,6 +30,16 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return flat
 
 
+def _as_sharding(leaf):
+    """Normalize a shardings-tree leaf to something device_put accepts."""
+    if isinstance(leaf, jax.sharding.Sharding):
+        return leaf
+    sharding = getattr(leaf, "sharding", None)
+    if isinstance(sharding, jax.sharding.Sharding):
+        return sharding
+    raise TypeError(f"cannot interpret {type(leaf).__name__} as a sharding")
+
+
 def save(path: str, params: Any, opt_state: Any = None, step: int = 0, extra: Optional[dict] = None):
     os.makedirs(path, exist_ok=True)
     np.savez(os.path.join(path, "params.npz"), **_flatten(params))
@@ -37,9 +54,19 @@ def save(path: str, params: Any, opt_state: Any = None, step: int = 0, extra: Op
 
 def _unflatten_into(template, flat: dict[str, np.ndarray], shardings=None):
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
-    shard_leaves = (
-        jax.tree.flatten(shardings)[0] if shardings is not None else [None] * len(leaves_with_path)
-    )
+    if shardings is not None:
+        # Default flatten drops None subtrees in the shardings tree exactly
+        # as it does in the template (masked optimizer trees rely on this
+        # alignment); a per-leaf "None = default placement" is therefore
+        # not expressible — omit the shardings tree instead.
+        shard_leaves = [_as_sharding(s) for s in jax.tree.flatten(shardings)[0]]
+        if len(shard_leaves) != len(leaves_with_path):
+            raise ValueError(
+                f"shardings tree has {len(shard_leaves)} leaves, template has "
+                f"{len(leaves_with_path)} — restore would misalign shards"
+            )
+    else:
+        shard_leaves = [None] * len(leaves_with_path)
     new_leaves = []
     for (path, leaf), shd in zip(leaves_with_path, shard_leaves):
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
@@ -52,7 +79,13 @@ def _unflatten_into(template, flat: dict[str, np.ndarray], shardings=None):
 
 
 def restore(path: str, params_template: Any, opt_template: Any = None, shardings=None, opt_shardings=None):
-    """Returns (params, opt_state or None, step)."""
+    """Returns (params, opt_state or None, step).
+
+    ``opt_shardings`` must be passed when the optimizer state was sharded
+    (ZeRO-1): without it the momentum restores replicated on the default
+    device. Build it with ``distributed.zero1.opt_shardings(opt_template,
+    params_template, mesh, zero1=True)``.
+    """
     flat_p = dict(np.load(os.path.join(path, "params.npz")))
     params = _unflatten_into(params_template, flat_p, shardings)
     opt_state = None

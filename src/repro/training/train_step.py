@@ -56,6 +56,7 @@ def train_step(
     compute_dtype=jnp.bfloat16,
     accum_steps: int = 1,
     bf16_grads: bool = False,
+    opt_shardings=None,
 ):
     """One optimization step. Returns (new_state, metrics).
 
@@ -67,6 +68,12 @@ def train_step(
     cross-data-replica gradient all-reduce moves bf16 instead of fp32
     (half the bytes; the optimizer still accumulates in fp32). Standard
     mixed-precision trade-off; see EXPERIMENTS.md §Perf.
+
+    ``opt_shardings``: optional pytree of NamedShardings matching the
+    optimizer state (``distributed.zero1.opt_shardings``). The fresh state
+    is pinned to it with a sharding constraint so ZeRO-1 momentum shards
+    survive the compiled step instead of being replicated at the
+    partitioner's whim.
     """
 
     if bf16_grads:
@@ -111,6 +118,10 @@ def train_step(
     updates, new_opt_state = optimizer.update(
         grads, state.opt_state, state.params, phase
     )
+    if opt_shardings is not None:
+        from repro.distributed import zero1 as zero1_lib
+
+        new_opt_state = zero1_lib.constrain(new_opt_state, opt_shardings)
     new_params = apply_updates(state.params, updates)
     metrics = dict(metrics)
     metrics["grad_norm"] = jnp.sqrt(
@@ -120,7 +131,7 @@ def train_step(
 
 
 def make_train_step_fns(cfg, optimizer, ctx, donate=True, compute_dtype=jnp.bfloat16,
-                        accum_steps: int = 1):
+                        accum_steps: int = 1, opt_shardings=None):
     """Returns {'block': jitted fn, 'full': jitted fn} over (state, batch)."""
     fns = {}
     for phase in ("block", "full"):
@@ -132,6 +143,7 @@ def make_train_step_fns(cfg, optimizer, ctx, donate=True, compute_dtype=jnp.bflo
             phase=phase,
             compute_dtype=compute_dtype,
             accum_steps=accum_steps,
+            opt_shardings=opt_shardings,
         )
         fns[phase] = jax.jit(step, donate_argnums=(0,) if donate else ())
     return fns

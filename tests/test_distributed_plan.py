@@ -1,0 +1,181 @@
+"""Comm planner: per-leaf predictions, ZeRO-1 accounting, spec derivation.
+
+Pure host-side math — runs on the abstract 16x16 mesh (no real devices)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import label_tree
+from repro.distributed import plan_comm
+from repro.models.model import init_params
+from repro.sharding import specs as sh
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+MESH = fake_mesh()
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b")
+    a_params = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = sh.param_specs(a_params, cfg, MESH)
+    return cfg, a_params, pspecs
+
+
+def test_block_phase_predicts_zero_bytes(granite):
+    _, a_params, pspecs = granite
+    plan = plan_comm(a_params, pspecs, MESH)
+    assert plan.predicted_bytes("block") == 0
+    assert plan.predicted("block") == {}
+
+
+def test_full_phase_prices_one_gather_per_sharded_muon_leaf(granite):
+    _, a_params, pspecs = granite
+    labels = label_tree(a_params)
+    plan = plan_comm(a_params, pspecs, MESH, labels=labels)
+    by_path = {leaf.path: leaf for leaf in plan.leaves}
+    flat_labels = {
+        leaf.path: lab
+        for leaf, lab in zip(plan.leaves, jax.tree.leaves(labels))
+    }
+    spec_leaves = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+    sizes = sh.mesh_axis_sizes(MESH)
+    total = 0
+    for leaf, spec in zip(plan.leaves, spec_leaves):
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        trailing_sharded = any(
+            e is not None and np.prod([sizes[n] for n in (e if isinstance(e, tuple) else (e,))]) > 1
+            for e in entries[-2:]
+        ) if len(leaf.shape) >= 2 else False
+        if flat_labels[leaf.path] == "muon" and trailing_sharded:
+            # one all-gather whose result is the full fp32 matrix
+            assert len(leaf.full) == 1, leaf
+            assert leaf.full[0].op == "all-gather"
+            assert leaf.full[0].bytes == 4 * int(np.prod(leaf.shape)), leaf
+            total += leaf.full[0].bytes
+        else:
+            assert leaf.full == (), leaf
+    assert plan.predicted_bytes("full") == total > 0
+    # mlp.wi is a flagship sharded muon leaf — must be in the plan
+    assert by_path["layers/mlp/wi"].full
+
+
+def test_zero1_divides_full_gathers_and_prices_apply(granite):
+    # granite has 36 layers: data=4 divides the stack dim (16 would not,
+    # and ZeRO-1 must then stay a no-op — covered below).
+    cfg, a_params, pspecs4 = granite
+    mesh4 = fake_mesh((4, 16))
+    pspecs = sh.param_specs(a_params, cfg, mesh4)
+    labels = label_tree(a_params)
+    base = plan_comm(a_params, pspecs, mesh4, labels=labels)
+    z = plan_comm(a_params, pspecs, mesh4, labels=labels, zero1=True)
+    assert z.predicted_bytes("block") == 0
+    sharded = [l for l in z.leaves if l.zero1_factor > 1]
+    assert sharded  # must actually engage on this mesh
+    for b_leaf, z_leaf in zip(base.leaves, z.leaves):
+        if b_leaf.full and z_leaf.zero1_factor > 1:
+            assert z_leaf.zero1_factor == 4
+            assert z_leaf.predicted_bytes("full") * 4 == b_leaf.predicted_bytes("full")
+    # apply-time gather: update in the PARAM layout (still model-sharded on
+    # the trailing dims), only under zero1
+    assert base.predicted_bytes("apply") == 0
+    assert z.predicted_bytes("apply") > 0
+    sizes = sh.mesh_axis_sizes(mesh4)
+    for leaf in sharded:
+        # trailing model factors of the PARAM layout (leaf.spec is the
+        # momentum spec: its lead-dim 'data' entry is the ZeRO-1 shard,
+        # not a trailing factor — on this mesh params never trail on data)
+        trailing = 1
+        for e in list(leaf.spec)[-2:]:
+            for n in (e if isinstance(e, tuple) else (e,)) if e else ():
+                if n != "data":
+                    trailing *= sizes.get(n, 1)
+        assert leaf.apply[0].bytes == 4 * int(np.prod(leaf.shape)) // trailing
+    # 16-way data axis does not divide 36 layers: zero1 degrades to a no-op
+    # for the muon stacks (2-D AdamW leaves like lm_head still shard)
+    z16 = plan_comm(a_params, pspecs4, MESH, labels=labels, zero1=True)
+    flat16 = dict(zip((l.path for l in z16.leaves), jax.tree.leaves(labels)))
+    assert all(
+        l.zero1_factor == 1 for l in z16.leaves if flat16[l.path] == "muon"
+    )
+
+
+def test_predicted_aggregate_matches_parse_collectives_shape(granite):
+    _, a_params, pspecs = granite
+    plan = plan_comm(a_params, pspecs, MESH)
+    agg = plan.predicted("full")
+    assert set(agg) == {"all-gather"}
+    assert agg["all-gather"]["count"] == sum(len(l.full) for l in plan.leaves)
+    assert agg["all-gather"]["bytes"] == plan.predicted_bytes("full")
+
+
+def test_momentum_spec_zero1_rules():
+    sizes = {"data": 8, "model": 4}
+    # 3D stacked leaf: lead dim picks up the data axis
+    assert sh.momentum_spec(P(None, None, "model"), (16, 4, 8), sizes, zero1=True) \
+        == P("data", None, "model")
+    # indivisible lead dim: untouched
+    assert sh.momentum_spec(P(None, None, "model"), (6, 4, 8), sizes, zero1=True) \
+        == P(None, None, "model")
+    # 2D muon leaf: never ZeRO-1 sharded (its dims are the MuonBP block grid)
+    assert sh.momentum_spec(P(None, "model"), (64, 8), sizes, zero1=True) \
+        == P(None, "model")
+    # 2D coordinate-wise (adamw) leaf: lead dim shards (embed/lm_head mu+nu)
+    assert sh.momentum_spec(P(None, "model"), (64, 8), sizes, zero1=True,
+                            label="adamw") == P("data", "model")
+    # ...but not over an already-sharded lead dim (vocab-parallel embed)
+    assert sh.momentum_spec(P("model", None), (64, 8), sizes, zero1=True,
+                            label="adamw") == P("model", None)
+    # zero1 off: pure mirror
+    assert sh.momentum_spec(P(None, "model"), (16, 8), sizes) == P(None, "model")
+
+
+def test_zero1_shards_2d_adamw_state():
+    """lm_head AdamW mu/nu (the largest state tensors) must ZeRO-1 shard."""
+    cfg = get_config("granite-8b")
+    a_params = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    mesh4 = fake_mesh((4, 16))
+    pspecs = sh.param_specs(a_params, cfg, mesh4)
+    plan = plan_comm(a_params, pspecs, mesh4, zero1=True)
+    by_path = {l.path: l for l in plan.leaves}
+    lm_head = by_path["lm_head"]
+    assert lm_head.label == "adamw"
+    assert lm_head.zero1_factor == 4, lm_head
+    # apply gather result stays model-sharded on the trailing dim
+    assert lm_head.apply[0].bytes == 4 * int(np.prod(lm_head.shape)) // 16
+
+
+def test_block_specs_tree_drives_block_predictions(granite):
+    """With the optimizer's block_specs tree, a sharded muon leaf WITHOUT a
+    usable block grid pays its full-step gathers on block steps too —
+    exactly the engine's gather condition."""
+    _, a_params, pspecs = granite
+    labels = label_tree(a_params)
+    none_bs = jax.tree.map(lambda _: None, a_params)
+    plan = plan_comm(a_params, pspecs, MESH, labels=labels, block_specs=none_bs)
+    sharded = [l for l in plan.leaves if l.full]
+    assert sharded
+    for leaf in sharded:
+        assert leaf.block == leaf.full, leaf
+    # the standard blocks-follow-shards tree restores zero-collective blocks
+    bspecs = sh.block_specs_for(a_params, pspecs, MESH)
+    plan2 = plan_comm(a_params, pspecs, MESH, labels=labels, block_specs=bspecs)
+    assert plan2.predicted_bytes("block") == 0
+
+
+def test_plan_leaf_counts_match_params(granite):
+    _, a_params, pspecs = granite
+    plan = plan_comm(a_params, pspecs, MESH)
+    assert len(plan.leaves) == len(jax.tree.leaves(a_params))
+    with pytest.raises(ValueError):
+        plan.predicted_bytes("decode")
