@@ -90,6 +90,8 @@ def run(quick: bool = False) -> list[str]:
     )
 
     # ---- pallas backend (interpret mode on CPU: correctness A/B only) -----
+    from repro.kernels.newton_schulz import fused
+
     gp = jax.random.normal(jax.random.PRNGKey(2), (4, 64, 128), jnp.float32)
     us_pallas = timeit(
         lambda x: orthogonalize(x, steps=5, backend="pallas"), gp,
@@ -104,4 +106,26 @@ def run(quick: bool = False) -> list[str]:
         row("ns_fused_ref_stack4_64x128_5steps", us_jnp_small,
             "jnp_same_shape_reference", backend="jnp", bucketing="on")
     )
+
+    # ---- fused-chain vs per-iteration: launch counts + wall time ----------
+    # The chain strategy runs all K NS iterations inside ONE pallas_call (X
+    # stays in VMEM for the whole chain); per-iteration launches K times and
+    # round-trips X through HBM K-1 extra times. Launch counts come from the
+    # module's trace-time counter — distinct shapes per variant force fresh
+    # traces, so the delta is exact. Off-TPU both run in interpret mode:
+    # wall times are correctness artifacts, the launch column is the win.
+    for strategy, shape in (("fused_chain", (4, 64, 160)), ("fused_iter", (4, 72, 160))):
+        gc = jax.random.normal(jax.random.PRNGKey(3), shape, jnp.float32)
+        before = fused.launch_count()
+        us = timeit(
+            lambda x, s=strategy: orthogonalize(x, steps=5, backend="pallas",
+                                                strategy=s),
+            gc, warmup=1, iters=2,
+        )
+        launches = fused.launch_count() - before
+        rows.append(
+            row(f"ns_{strategy}_stack4_{shape[-2]}x{shape[-1]}_5steps", us,
+                f"{launches}_launches_per_orthogonalization",
+                backend="pallas", bucketing="on")
+        )
     return rows

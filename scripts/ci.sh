@@ -9,6 +9,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== tracked-bytecode guard =="
+# __pycache__ artifacts were committed twice by accident; .gitignore plus
+# this gate make a third time a CI failure instead of a review nit.
+if git ls-files '*.pyc' '*.pyo' | grep .; then
+    echo "tracked Python bytecode found (see above); git rm --cached it" >&2
+    exit 1
+fi
+
 echo "== tier-1 tests =="
 python -m pytest -x -q -m "not slow"
 

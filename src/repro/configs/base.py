@@ -117,13 +117,18 @@ class NSEngineConfig:
     """Newton-Schulz execution-engine knobs (see ``repro/kernels/dispatch.py``).
 
     ``backend`` picks the NS execution path ("jnp" pure-XLA chain or
-    "pallas" fused kernel, interpret-mode off-TPU); ``bucketing`` toggles
-    the shape-bucketed batched dispatch in ``core/bucketing.py`` (one NS
-    chain per distinct unit shape instead of one per parameter leaf).
-    Env overrides: ``REPRO_NS_BACKEND``, ``REPRO_NS_BUCKETING=0``.
+    "pallas" kernels, interpret-mode off-TPU); ``strategy`` pins the kernel
+    within the backend ("auto" lets the compiled UpdateProgram pick per
+    bucket: fused_chain when the working set fits VMEM, tiled otherwise;
+    "fused_iter" keeps the one-launch-per-iteration kernel for A/Bs);
+    ``bucketing`` toggles the shape-bucketed program in ``core/program.py``
+    (one NS chain per distinct unit shape instead of one per parameter
+    leaf). Env overrides: ``REPRO_NS_BACKEND``, ``REPRO_NS_STRATEGY``,
+    ``REPRO_NS_BUCKETING=0``.
     """
 
     backend: str = "jnp"          # "jnp" | "pallas"
+    strategy: str = "auto"        # "auto" | "jnp" | "fused_chain" | "fused_iter" | "tiled"
     bucketing: bool = True
 
     @classmethod
@@ -132,6 +137,7 @@ class NSEngineConfig:
 
         return cls(
             backend=os.environ.get("REPRO_NS_BACKEND", cls.backend),
+            strategy=os.environ.get("REPRO_NS_STRATEGY", cls.strategy),
             bucketing=os.environ.get("REPRO_NS_BUCKETING", "1").lower()
             not in ("0", "false", "off"),
         )

@@ -9,6 +9,7 @@ from repro.core.blocking import (
 )
 from repro.core.bucketing import bucketed_orthogonalize, plan_buckets
 from repro.core.combine import apply_updates, combine, default_label_fn, label_tree
+from repro.core.program import LeafSpec, UpdateProgram, compile_program
 from repro.core.dion import dion
 from repro.core.muon import (
     Optimizer,
@@ -33,8 +34,10 @@ __all__ = [
     "block_spec_from_partition",
     "bucketed_orthogonalize",
     "combine",
+    "compile_program",
     "default_label_fn",
     "dion",
+    "LeafSpec",
     "JORDAN_COEFFS",
     "label_tree",
     "muon",
@@ -48,4 +51,5 @@ __all__ = [
     "phase_for_step",
     "plan_buckets",
     "unpartition_blocks",
+    "UpdateProgram",
 ]

@@ -17,7 +17,7 @@ Two packing modes, chosen by the caller per phase:
   * ``mode="concat"`` — flatten each leaf's leading dims and concatenate all
     units along the stack axis. Maximum batching (different unit counts
     merge). Used on FULL steps: the full orthogonalization gathers shards
-    anyway, and a fatter stack also feeds ``distribute_full`` better.
+    anyway, and a fatter stack also feeds the ``layer_shard`` CommOp better.
   * ``mode="stack"`` — bucket by the *entire* blocked shape and stack
     members along a NEW leading axis. Concatenating the block dim of
     differently-owned shard-local blocks would force GSPMD to all-gather
@@ -33,9 +33,12 @@ costs more than the one extra dispatch — the batched orthogonalizer already
 transposes the whole bucket internally, where XLA fuses it into the first
 Gram matmul.
 
-``core.muon`` routes its update through :func:`bucketed_orthogonalize`;
-benchmarks and tests can compare against the per-leaf fallback via the
-optimizer's ``bucketing=False`` switch.
+This module owns the *mechanics* of bucketing — planning (:func:`plan_leaf`,
+:func:`plan_buckets`), packing (:func:`pack_bucket`) and unpacking
+(:func:`unpack_bucket`). The *decision* of which leaves form which buckets
+per phase is compiled once into an :class:`repro.core.program.UpdateProgram`
+whose interpreter calls these helpers; :func:`bucketed_orthogonalize` remains
+the standalone leaf-level utility for tests and ad-hoc callers.
 """
 
 from __future__ import annotations
@@ -62,7 +65,7 @@ class LeafPlan:
     block_shape: tuple                         # shape after blocking
 
 
-def _plan_for(shape: tuple, dtype, spec, mode: str) -> LeafPlan:
+def plan_leaf(shape: tuple, dtype, spec, mode: str) -> LeafPlan:
     """Compute a leaf's bucket plan from shape/dtype alone (no data)."""
     applied = None
     if spec is not None and spec.num_blocks > 1:
@@ -85,18 +88,53 @@ def _plan_for(shape: tuple, dtype, spec, mode: str) -> LeafPlan:
     return LeafPlan(key=key, units=units, spec=applied, block_shape=block_shape)
 
 
-def _partition(leaf: jax.Array, plan: LeafPlan) -> jax.Array:
+def partition_leaf(leaf: jax.Array, plan: LeafPlan) -> jax.Array:
+    """Apply the plan's logical block partitioning (identity when unblocked)."""
     x = leaf
     if plan.spec is not None:
         x = blocking.partition_blocks(x, plan.spec)
     return x
 
 
-def _restore(x: jax.Array, plan: LeafPlan) -> jax.Array:
+def restore_leaf(x: jax.Array, plan: LeafPlan) -> jax.Array:
+    """Inverse of :func:`partition_leaf` plus the bucket-shape reshape."""
     x = x.reshape(plan.block_shape)
     if plan.spec is not None:
         x = blocking.unpartition_blocks(x, plan.spec)
     return x
+
+
+def pack_bucket(parts: Sequence[jax.Array], mode: str) -> jax.Array:
+    """Pack already-partitioned bucket members into one batched tensor.
+
+    Single-member buckets pass through untouched (the batched orthogonalizer
+    maps over whatever leading dims the member already has) — this keeps the
+    degenerate ``bucketing=False`` program bitwise-identical to per-leaf
+    dispatch. Multi-member buckets either concat flattened units along the
+    stack axis (``"concat"``) or stack on a new leading axis (``"stack"``).
+    """
+    if len(parts) == 1:
+        return parts[0]
+    if mode == "concat":
+        return jnp.concatenate(
+            [p.reshape(-1, p.shape[-2], p.shape[-1]) for p in parts], axis=0
+        )
+    return jnp.stack(parts, axis=0)
+
+
+def unpack_bucket(
+    packed: jax.Array, plans: Sequence[LeafPlan], mode: str
+) -> list[jax.Array]:
+    """Invert :func:`pack_bucket`: scatter the batched result per member."""
+    if len(plans) == 1:
+        return [restore_leaf(packed, plans[0])]
+    if mode == "concat":
+        out, offset = [], 0
+        for plan in plans:
+            out.append(restore_leaf(packed[offset : offset + plan.units], plan))
+            offset += plan.units
+        return out
+    return [restore_leaf(packed[pos], plan) for pos, plan in enumerate(plans)]
 
 
 def plan_buckets(
@@ -111,7 +149,7 @@ def plan_buckets(
     """
     buckets: dict[BucketKey, list[int]] = {}
     for idx, (leaf, spec) in enumerate(zip(leaves, specs)):
-        plan = _plan_for(tuple(leaf.shape), leaf.dtype, spec, mode)
+        plan = plan_leaf(tuple(leaf.shape), leaf.dtype, spec, mode)
         buckets.setdefault(plan.key, []).append(idx)
     return buckets
 
@@ -137,7 +175,7 @@ def bucketed_orthogonalize(
     Returns the orthogonalized leaves, original shapes and order.
     """
     plans = [
-        _plan_for(tuple(leaf.shape), leaf.dtype, spec, mode)
+        plan_leaf(tuple(leaf.shape), leaf.dtype, spec, mode)
         for leaf, spec in zip(leaves, specs)
     ]
     buckets: dict[BucketKey, list[int]] = {}
@@ -146,22 +184,8 @@ def bucketed_orthogonalize(
 
     results: list[Optional[jax.Array]] = [None] * len(leaves)
     for members in buckets.values():
-        parts = [_partition(leaves[i], plans[i]) for i in members]
-        if len(parts) == 1:
-            i = members[0]
-            results[i] = _restore(orth(parts[0]), plans[i])
-        elif mode == "concat":
-            flat = [
-                p.reshape(-1, p.shape[-2], p.shape[-1]) for p in parts
-            ]
-            orthed = orth(jnp.concatenate(flat, axis=0))
-            offset = 0
-            for i in members:
-                n = plans[i].units
-                results[i] = _restore(orthed[offset : offset + n], plans[i])
-                offset += n
-        else:  # stack: new leading axis, operand shardings preserved
-            orthed = orth(jnp.stack(parts, axis=0))
-            for pos, i in enumerate(members):
-                results[i] = _restore(orthed[pos], plans[i])
+        parts = [partition_leaf(leaves[i], plans[i]) for i in members]
+        orthed = orth(pack_bucket(parts, mode))
+        for i, out in zip(members, unpack_bucket(orthed, [plans[i] for i in members], mode)):
+            results[i] = out
     return results  # type: ignore[return-value]

@@ -18,16 +18,17 @@ orthogonalized update is additionally scaled by ``rms_target *
 sqrt(max(m_eff, n_eff))`` where the effective dims are the *block* dims on
 block steps and the full dims on full steps.
 
-Execution engine (see ``core/bucketing.py`` and ``kernels/dispatch.py``):
-by default the update is *shape-bucketed* — every NS unit in the step
-(whole matrices on full steps, shard-local blocks on block steps) is
-grouped by exact unit shape and each bucket runs as ONE batched
-Newton-Schulz chain, so the per-step NS dispatch count equals the number
-of distinct unit shapes rather than the number of parameter leaves.
-``bucketing=False`` restores the per-leaf path (same numerics; kept for
-A/B benchmarks and as the reference). ``ns_backend`` selects the NS
-execution backend ("jnp" | "pallas"); None defers to the dispatch
-registry default (``REPRO_NS_BACKEND`` env var, else "jnp").
+Execution: ``update`` is a thin interpreter of a compiled
+:class:`repro.core.program.UpdateProgram` (see ARCHITECTURE.md). The program
+is compiled once per (leaf shapes/dtypes, block grid, backend) from static
+information and fixes, per phase, the ordered bucket pipeline — pack ->
+comm -> orthogonalize(kernel plan) -> unpack — so blocking, bucketing, VMEM
+fits, and communication are never re-derived inside the step. Every former
+configuration is a *program*, not a code path: ``bucketing=False`` compiles
+the degenerate one-bucket-per-leaf program, ``comm=`` (a ShardMapEngine)
+compiles the explicit-collective program executed in one shard_map region
+per step, and ``layer_shard=`` attaches the layer-partitioned full-step
+re-shard (the former ``distribute_full`` option, now a program CommOp).
 """
 
 from __future__ import annotations
@@ -39,7 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blocking, newton_schulz
-from repro.core import bucketing as bucketing_lib
+from repro.core import program as program_lib
 from repro.core.newton_schulz import PAPER_COEFFS
 
 PyTree = Any
@@ -85,6 +86,10 @@ def _rms_scale(m: int, n: int, target: float) -> float:
     return target * float(max(m, n)) ** 0.5
 
 
+def _path_key(path) -> tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
 def muon(
     lr_full,
     lr_block=None,
@@ -98,10 +103,11 @@ def muon(
     rms_target: float = 0.2,
     weight_decay: float = 0.0,
     block_specs: Optional[PyTree] = None,
-    distribute_full: Optional[tuple] = None,
     bucketing: bool = True,
     ns_backend: Optional[str] = None,
+    ns_strategy: Optional[str] = None,
     comm: Optional[Any] = None,
+    layer_shard: Optional[tuple] = None,
 ) -> Optimizer:
     """Build the Muon-family optimizer (paper Algorithm 1).
 
@@ -114,73 +120,76 @@ def muon(
       block_specs: pytree of :class:`blocking.BlockSpec2D` matching params
         (leaves may be None for (1,1)). Derived from the sharding layout by
         ``repro.sharding.specs.block_specs_for``.
-      distribute_full: optional ``(mesh, axis_name)``. Beyond-paper
-        optimization of the FULL step: the paper notes that a naive
-        all-gather "would force us to orthogonalize the same matrix in
-        parallel which is redundant" (Sec 2.2). With this set, the stacked
-        per-layer matrices are resharded so their *layer* dim is partitioned
-        over ``axis_name`` (padding to a multiple when needed) — each rank
-        gathers and orthogonalizes only its share of layers (Liu et al.
-        2025 Distributed-Muon, expressed in GSPMD), cutting full-step NS
-        FLOPs and gather traffic by ~axis_size.
-      bucketing: run NS through the shape-bucketed batched engine (one NS
-        chain per distinct unit shape). False restores per-leaf dispatch.
+      bucketing: compile the shape-bucketed program (one NS chain per
+        distinct unit shape). False compiles the degenerate per-leaf
+        program (same numerics; kept for A/B benchmarks and as the
+        reference).
       ns_backend: NS execution backend name for ``kernels.dispatch``
-        ("jnp" | "pallas"); None uses the registry default.
+        ("jnp" | "pallas"); None uses the registry default. The program
+        records one kernel strategy per bucket (fused-chain / per-iteration
+        / tiled) from the packed shape at compile time.
+      ns_strategy: pin that per-bucket kernel strategy instead
+        (``dispatch.STRATEGIES``; None/"auto" keeps the shape-derived plan).
       comm: optional :class:`repro.distributed.ShardMapEngine`. When set,
-        the orthogonalization of every leaf runs inside one explicit
-        ``shard_map`` region per step — block steps operate directly on the
-        shard-local blocks with zero collectives, full steps schedule one
-        hand-written all-gather per sharded leaf (momentum shards -> full
-        NS -> local slice) — instead of relying on the GSPMD partitioner.
-        Supersedes ``distribute_full``. Numerics match the implicit path.
+        the program compiles with explicit leaf-level comm ops and every
+        step executes inside one ``shard_map`` region — block steps operate
+        directly on the shard-local blocks with zero collectives, full
+        steps schedule one hand-written all-gather per sharded leaf
+        (momentum shards -> full NS -> local slice) — instead of relying on
+        the GSPMD partitioner.
+      layer_shard: optional ``(mesh, axis_name)`` (GSPMD mode only; mutually
+        exclusive with ``comm``). Beyond-paper optimization of the FULL
+        step: the paper notes a naive all-gather "would force us to
+        orthogonalize the same matrix in parallel which is redundant"
+        (Sec 2.2). The program attaches a ``layer_shard`` CommOp to every
+        full-step stack: the packed per-layer matrices re-shard their layer
+        dim over ``axis_name`` (padding to a multiple when needed) so each
+        rank orthogonalizes only its share of layers (Liu et al. 2025
+        Distributed-Muon, expressed in GSPMD), cutting full-step NS FLOPs
+        and gather traffic by ~axis_size.
     """
     lr_full_fn = _as_schedule(lr_full)
     lr_block_fn = _as_schedule(lr_block if lr_block is not None else lr_full)
     mu = momentum
 
+    # Path-keyed block-spec lookup: robust to masked (None-leaf) param trees
+    # from `combine` even when block_specs covers all leaves.
+    bs_by_path: dict = {}
+    if block_specs is not None:
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+            block_specs,
+            is_leaf=lambda x: x is None or isinstance(x, blocking.BlockSpec2D),
+        )[0]:
+            bs_by_path[_path_key(path)] = leaf
+
+    # Program cache: one compiled UpdateProgram per (leaf layout, backend).
+    # Leaf layouts are static per jit trace; the backend participates in the
+    # key because the registry default can be flipped process-wide between
+    # eager calls (set_backend / REPRO_NS_BACKEND).
+    programs: dict = {}
+
+    def _program_for(leaf_specs: tuple, backend: str) -> program_lib.UpdateProgram:
+        cache_key = (leaf_specs, backend)
+        if cache_key not in programs:
+            programs[cache_key] = program_lib.compile_program(
+                leaf_specs,
+                bucketing=bucketing,
+                backend=backend,
+                strategy=ns_strategy,
+                engine=comm,
+                layer_shard=layer_shard,
+            )
+        return programs[cache_key]
+
     def init(params: PyTree) -> OptState:
         zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
         return OptState(momentum=zeros, count=jnp.zeros((), jnp.int32))
 
-    def _orth(u: jax.Array) -> jax.Array:
+    def _orth(u: jax.Array, strategy: Optional[str] = None) -> jax.Array:
         return newton_schulz.orthogonalize(
-            u, steps=ns_steps, coeffs=ns_coeffs, backend=ns_backend
+            u, steps=ns_steps, coeffs=ns_coeffs, backend=ns_backend,
+            strategy=strategy,
         )
-
-    def _orth_full(u: jax.Array) -> jax.Array:
-        if distribute_full is not None and u.ndim >= 3:
-            return _orth_full_distributed(u)
-        return _orth(u)
-
-    def _orth_full_distributed(u: jax.Array) -> jax.Array:
-        """Layer-distributed full NS: shard the stacked-matrix dim."""
-        from jax.sharding import NamedSharding, PartitionSpec
-
-        mesh, axis = distribute_full
-        axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
-        *lead, m, n = u.shape
-        stack = 1
-        for d in lead:
-            stack *= d
-        u2 = u.reshape(stack, m, n)
-        pad = (-stack) % axis_size
-        if pad:
-            u2 = jnp.concatenate([u2, jnp.zeros((pad, m, n), u2.dtype)], axis=0)
-        u2 = jax.lax.with_sharding_constraint(
-            u2, NamedSharding(mesh, PartitionSpec(axis, None, None))
-        )
-        o = _orth(u2)
-        if pad:
-            o = o[:stack]
-        return o.reshape(*lead, m, n)
-
-    def _orth_block(u: jax.Array, bs: blocking.BlockSpec2D) -> jax.Array:
-        if bs is None or bs.num_blocks == 1:
-            return _orth_full(u)
-        blocks = blocking.partition_blocks(u, bs)
-        blocks = _orth(blocks)
-        return blocking.unpartition_blocks(blocks, bs)
 
     def update(grads: PyTree, state: OptState, params: PyTree, phase: str = "block"):
         if phase not in ("block", "full"):
@@ -192,132 +201,44 @@ def muon(
             lambda m, g: mu * m + g.astype(jnp.float32), state.momentum, grads
         )
 
-        # Path-keyed block-spec lookup: robust to masked (None-leaf) param
-        # trees from `combine` even when block_specs covers all leaves.
-        bs_by_path: dict = {}
-        if block_specs is not None:
-            for path, leaf in jax.tree_util.tree_flatten_with_path(
-                block_specs,
-                is_leaf=lambda x: x is None or isinstance(x, blocking.BlockSpec2D),
-            )[0]:
-                key = tuple(
-                    str(getattr(k, "key", getattr(k, "idx", k))) for k in path
-                )
-                bs_by_path[key] = leaf
+        # ---- prologue: flat leaves + NS inputs -------------------------
+        flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+        keys = [_path_key(path) for path, _ in flat]
+        g_leaves = [l for _, l in flat]
+        m_leaves = jax.tree.leaves(new_m)
+        p_leaves = jax.tree.leaves(params)
+        u_leaves = [
+            (g.astype(jnp.float32) + mu * m) if nesterov else m
+            for g, m in zip(g_leaves, m_leaves)
+        ]
 
-        def finish(o, p, scale):
+        # ---- the compiled program -------------------------------------
+        from repro.kernels import dispatch
+
+        backend = ns_backend if ns_backend is not None else dispatch.get_backend()
+        leaf_specs = tuple(
+            program_lib.LeafSpec(
+                key=key,
+                shape=tuple(u.shape),
+                dtype=str(jnp.dtype(u.dtype).name),
+                block=bs_by_path.get(key),
+            )
+            for key, u in zip(keys, u_leaves)
+        )
+        program = _program_for(leaf_specs, backend)
+        o_leaves = program.execute(phase, u_leaves, _orth)
+
+        # ---- epilogue: RMS-matched scaling + weight decay + repack ----
+        prog_phase = program.phase(phase)
+        upd_leaves = []
+        for i, (o, p) in enumerate(zip(o_leaves, p_leaves)):
+            m_eff, n_eff = prog_phase.eff_dims(i)
+            scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
             upd = -lr * scale * o
             if weight_decay:
                 upd = upd - lr * weight_decay * p.astype(jnp.float32)
-            return upd.astype(p.dtype)
-
-        def eff_dims(shape, bs):
-            mdim, ndim = int(shape[-2]), int(shape[-1])
-            if phase == "full" or bs is None or bs.num_blocks == 1:
-                return mdim, ndim
-            return mdim // bs.r, ndim // bs.c
-
-        def per_param(path, g, m, p):
-            key = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-            bs = bs_by_path.get(key)
-            u = (g.astype(jnp.float32) + mu * m) if nesterov else m
-            if phase == "full" or bs is None or bs.num_blocks == 1:
-                o = _orth_full(u)
-            else:
-                o = _orth_block(u, bs)
-            m_eff, n_eff = eff_dims(u.shape, bs)
-            scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
-            return finish(o, p, scale)
-
-        def flatten_update_inputs(grads, new_m, params):
-            """Shared prologue: leaves, path keys, NS inputs, block specs."""
-            flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
-            keys = [
-                tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-                for path, _ in flat
-            ]
-            g_leaves = [l for _, l in flat]
-            m_leaves = jax.tree.leaves(new_m)
-            p_leaves = jax.tree.leaves(params)
-            u_leaves = [
-                (g.astype(jnp.float32) + mu * m) if nesterov else m
-                for g, m in zip(g_leaves, m_leaves)
-            ]
-            bs_leaves = [bs_by_path.get(key) for key in keys]
-            return treedef, keys, u_leaves, p_leaves, bs_leaves
-
-        def finish_leaves(treedef, u_leaves, o_leaves, p_leaves, bs_leaves):
-            """Shared epilogue: RMS-matched scaling + weight decay + repack."""
-            upd_leaves = []
-            for u, o, p, bs in zip(u_leaves, o_leaves, p_leaves, bs_leaves):
-                m_eff, n_eff = eff_dims(u.shape, bs)
-                scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
-                upd_leaves.append(finish(o, p, scale))
-            return jax.tree_util.tree_unflatten(treedef, upd_leaves)
-
-        def bucketed(grads, new_m, params):
-            """One NS chain per shape bucket instead of one per leaf."""
-            treedef, _, u_leaves, p_leaves, bs_leaves = flatten_update_inputs(
-                grads, new_m, params
-            )
-            specs = [
-                None
-                if phase == "full" or bs is None or bs.num_blocks == 1
-                else bs
-                for bs in bs_leaves
-            ]
-            # Full steps concat-pack (the gather happens regardless, and the
-            # fat stack feeds distribute_full); block steps stack-pack so
-            # shard-local blocks keep their sharding — zero collectives.
-            if phase == "full":
-                o_leaves = bucketing_lib.bucketed_orthogonalize(
-                    u_leaves, specs, _orth_full, mode="concat"
-                )
-            elif distribute_full is None:
-                o_leaves = bucketing_lib.bucketed_orthogonalize(
-                    u_leaves, specs, _orth, mode="stack"
-                )
-            else:
-                # Block step with the distributed-full option: unblocked
-                # leaves keep their per-leaf _orth_full treatment (stacking
-                # them would change which leaves get layer-distributed NS);
-                # only the shard-local blocked leaves are bucketed.
-                o_leaves = list(
-                    bucketing_lib.bucketed_orthogonalize(
-                        [u for u, s in zip(u_leaves, specs) if s is not None],
-                        [s for s in specs if s is not None],
-                        _orth,
-                        mode="stack",
-                    )
-                )
-                merged = []
-                for u, s in zip(u_leaves, specs):
-                    merged.append(_orth_full(u) if s is None else o_leaves.pop(0))
-                o_leaves = merged
-            return finish_leaves(treedef, u_leaves, o_leaves, p_leaves, bs_leaves)
-
-        def via_comm(grads, new_m, params):
-            """Explicitly-scheduled path: one shard_map region per step.
-
-            The engine gathers/slices by hand and runs NS (bucketed when
-            ``bucketing``) on shard-local data; see distributed/engine.py.
-            """
-            treedef, keys, u_leaves, p_leaves, bs_leaves = flatten_update_inputs(
-                grads, new_m, params
-            )
-            o_leaves = comm.orthogonalize(
-                keys, u_leaves, bs_leaves, _orth, phase=phase, bucketing=bucketing
-            )
-            return finish_leaves(treedef, u_leaves, o_leaves, p_leaves, bs_leaves)
-
-        if comm is not None:
-            updates = via_comm(grads, new_m, params)
-        elif bucketing:
-            updates = bucketed(grads, new_m, params)
-        else:
-            updates = jax.tree_util.tree_map_with_path(
-                per_param, grads, new_m, params
-            )
+            upd_leaves.append(upd.astype(p.dtype))
+        updates = jax.tree_util.tree_unflatten(treedef, upd_leaves)
         return updates, OptState(momentum=new_m, count=count)
 
     return Optimizer(init=init, update=update)

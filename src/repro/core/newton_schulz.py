@@ -52,15 +52,22 @@ def orthogonalize(
     coeffs=PAPER_COEFFS,
     eps: float = 1e-7,
     backend: str | None = None,
+    strategy: str | None = None,
 ) -> jax.Array:
     """Approximate ``Orth(g)`` via the selected execution backend.
 
-    ``backend=None`` defers to the registry default (see module docstring).
-    All backends share the semantics documented on ``orthogonalize_jnp``.
+    ``backend=None`` defers to the registry default (see module docstring);
+    ``strategy`` pins the kernel within the backend (``dispatch.STRATEGIES``
+    — the compiled UpdateProgram passes its per-bucket plan here so the VMEM
+    fit is decided once, not per step). All backends share the semantics
+    documented on ``orthogonalize_jnp``.
     """
     from repro.kernels import dispatch  # late import: kernels layer is optional
 
-    return dispatch.orthogonalize(g, steps=steps, coeffs=coeffs, eps=eps, backend=backend)
+    return dispatch.orthogonalize(
+        g, steps=steps, coeffs=coeffs, eps=eps, backend=backend,
+        strategy=strategy,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "coeffs", "eps"))

@@ -1,0 +1,581 @@
+"""UpdateProgram: the MuonBP update compiled once, interpreted every step.
+
+The paper's contribution is a *schedule* — shard-local block Newton-Schulz
+most steps, one full orthogonalization every P steps, with two stepsizes.
+Before this module that schedule was executed by four divergent paths inside
+``core/muon.py`` (per-leaf, shape-bucketed, shard_map-engine, and the legacy
+GSPMD ``distribute_full``), each re-deriving blocking / bucketing / comm
+decisions at every traced step. Here all of those decisions are made ONCE,
+from static information only (leaf shapes + dtypes, the logical block grid,
+the optional distributed engine's momentum PartitionSpecs, the NS kernel
+backend), and recorded as a program that ``muon.update`` merely interprets:
+
+    UpdateProgram
+      └── PhaseProgram ('block' | 'full')
+            ├── leaf_execs: per-leaf static record — pack plan, RMS-matching
+            │               effective dims, momentum spec, optional gather
+            │               CommOp (shard_map engine full steps)
+            └── ops: ordered BucketOps, each
+                  pack -> [bucket comm] -> orthogonalize(kernel plan) -> unpack
+
+Per ``BucketOp`` the pipeline is:
+
+  * **pack**    — members are logically blocked (``blocking.partition_blocks``
+    via each leaf's :class:`bucketing.LeafPlan`) and packed into one batched
+    tensor (``concat`` on full steps and inside the shard_map body where
+    everything is device-local; ``stack`` on GSPMD block steps so operand
+    shardings survive and the step stays zero-collective).
+  * **comm**    — an optional bucket-level :class:`CommOp`: ``layer_shard``
+    re-shards the packed stack's leading dim over a mesh axis so each rank
+    orthogonalizes only its share of layers (the fold of the old
+    ``distribute_full`` GSPMD option into the program). Leaf-level ``gather``
+    CommOps (shard_map full steps) run before packing, inside the engine's
+    region. Every CommOp carries its predicted collectives in the same
+    per-device result-buffer byte convention as ``distributed/plan.py``, so
+    program and CommPlan price communication identically.
+  * **orthogonalize** — one batched NS chain per bucket, executed by the
+    kernel named in the bucket's :class:`KernelPlan` (``fused_chain``: all K
+    iterations in one Pallas launch when the working set fits VMEM;
+    ``fused_iter``: one launch per iteration; ``tiled``: the 3-launch HBM
+    streaming path, now batched for oversized stacks; ``jnp``: pure XLA).
+    The plan is chosen at compile time from the packed shape via
+    ``kernels.dispatch.plan_strategy``.
+  * **unpack / finish** — results scatter back to leaves; ``muon.update``
+    applies the static per-leaf ``eff_dims`` RMS scaling, the phase stepsize,
+    and weight decay.
+
+``bucketing=False`` compiles the *degenerate* program — one BucketOp per
+leaf — so the reference per-leaf path is a configuration of the same
+interpreter rather than separate code. The shard_map engine path is the same
+program with leaf CommOps, executed inside ``ShardMapEngine.run_program``'s
+single shard_map region. Numerics are identical across all configurations
+(asserted in tests/test_update_program.py and the 8-device distributed
+suite).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking
+from repro.core import bucketing as bucketing_lib
+
+PathKey = tuple[str, ...]
+FP32_BYTES = 4  # NS inputs are fp32 (momentum dtype) — plan.py convention
+
+__all__ = [
+    "LeafSpec",
+    "CommOp",
+    "KernelPlan",
+    "LeafExec",
+    "BucketOp",
+    "PhaseProgram",
+    "UpdateProgram",
+    "compile_program",
+    "execute_ops",
+]
+
+
+# ---------------------------------------------------------------------------
+# Static program structure
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Static description of one muon leaf — all the compiler reads.
+
+    ``block`` is the leaf's logical MuonBP block grid (``None`` or a
+    (1, 1) grid mean the leaf is orthogonalized whole on every phase).
+    """
+
+    key: PathKey
+    shape: tuple
+    dtype: str
+    block: Optional[blocking.BlockSpec2D] = None
+
+    @property
+    def blocked(self) -> bool:
+        return self.block is not None and self.block.num_blocks > 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CommOp:
+    """One predicted communication step of the program.
+
+    ``kind``:
+      * ``'gather'``      — leaf-level tiled all-gather of the trailing
+        (matrix) dims inside the shard_map region (engine full steps, and
+        block steps for sharded leaves with no usable block grid). The
+        matching local ``dynamic_slice`` after NS is free (no collective).
+      * ``'layer_shard'`` — bucket-level GSPMD re-shard of the packed
+        stack's leading dim over ``axes[0]`` so full-step NS FLOPs divide
+        by the axis size (the old ``distribute_full``, folded into the
+        program).
+
+    ``collectives`` are ``(op, axes, per_device_result_bytes)`` tuples in
+    the exact convention of ``distributed.plan.Collective`` so
+    ``predicted_bytes`` sums compare 1:1 with ``CommPlan`` and the HLO
+    audit.
+    """
+
+    kind: str
+    axes: tuple[str, ...] = ()
+    collectives: tuple[tuple[str, tuple[str, ...], int], ...] = ()
+
+    @property
+    def predicted_bytes(self) -> int:
+        return sum(b for _, _, b in self.collectives)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Which NS kernel a bucket runs: backend + static strategy.
+
+    ``strategy`` is one of ``kernels.dispatch.STRATEGIES`` — decided once at
+    compile time from the packed shape, so the per-step interpreter never
+    re-derives VMEM fits.
+    """
+
+    backend: str
+    strategy: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafExec:
+    """Per-leaf execution record for one phase."""
+
+    index: int                              # position in the flat muon-leaf list
+    plan: bucketing_lib.LeafPlan            # pack plan on the in-body shape
+    eff_dims: tuple[int, int]               # RMS-matching dims for this phase
+    spec: Optional[Any] = None              # normalized momentum PartitionSpec
+    gather: Optional[CommOp] = None         # engine-mode pre-pack gather
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketOp:
+    """One pack -> comm -> orthogonalize -> unpack step of a phase."""
+
+    bucket_key: tuple
+    leaves: tuple[LeafExec, ...]
+    mode: str                               # 'concat' | 'stack'
+    kernel: KernelPlan
+    comm: Optional[CommOp] = None           # bucket-level layer_shard
+    packed_shape: tuple = ()                # shape the kernel actually sees
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseProgram:
+    phase: str
+    leaf_execs: tuple[LeafExec, ...]        # index order == muon leaf order
+    ops: tuple[BucketOp, ...]
+
+    def predicted_comm_bytes(self) -> int:
+        """Predicted collective bytes/step (plan.py result-buffer convention)."""
+        total = sum(
+            le.gather.predicted_bytes for le in self.leaf_execs if le.gather
+        )
+        total += sum(op.comm.predicted_bytes for op in self.ops if op.comm)
+        return total
+
+    def eff_dims(self, index: int) -> tuple[int, int]:
+        return self.leaf_execs[index].eff_dims
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateProgram:
+    """The compiled two-phase update schedule; ``execute`` interprets it."""
+
+    leaf_specs: tuple[LeafSpec, ...]
+    phases: dict                            # 'block'/'full' -> PhaseProgram
+    engine: Optional[Any] = None            # ShardMapEngine (duck-typed)
+    layer_shard: Optional[tuple] = None     # (mesh, axis) for layer_shard ops
+
+    def phase(self, name: str) -> PhaseProgram:
+        return self.phases[name]
+
+    def execute(
+        self, phase: str, u_leaves: Sequence[jax.Array], orth: Callable
+    ) -> list[jax.Array]:
+        """Run one phase of the program over the NS inputs.
+
+        ``orth(x, strategy=...)`` is the leaf-level orthogonalizer already
+        bound to steps/coeffs/backend. With an engine, execution happens
+        inside the engine's single shard_map region (leaf gathers/slices by
+        hand); otherwise the ops run directly under GSPMD.
+        """
+        prog = self.phases[phase]
+        if not u_leaves:
+            return []
+        if self.engine is not None:
+            return self.engine.run_program(prog, u_leaves, orth)
+        return execute_ops(
+            prog.ops, list(u_leaves), orth, layer_shard=self.layer_shard
+        )
+
+    def summary(self) -> str:
+        """Human-readable program listing (for docs/debugging)."""
+        lines = []
+        for name in ("block", "full"):
+            prog = self.phases[name]
+            lines.append(
+                f"{name}: {len(prog.ops)} bucket op(s), "
+                f"predicted comm {prog.predicted_comm_bytes()} B"
+            )
+            for op in prog.ops:
+                comm = op.comm.kind if op.comm else (
+                    "gather" if any(l.gather for l in op.leaves) else "none"
+                )
+                lines.append(
+                    f"  [{op.mode}] {len(op.leaves)} leaf/leaves -> "
+                    f"{op.packed_shape} {op.kernel.backend}/{op.kernel.strategy} "
+                    f"comm={comm}"
+                )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Interpreter
+# ---------------------------------------------------------------------------
+
+
+def _layer_shard_dims(packed_shape: tuple, layer_shard: tuple) -> tuple[int, int, int]:
+    """(axis_size, stack, stack_padded) for a packed (..., m, n) stack —
+    the one place the flatten/pad-to-multiple arithmetic lives."""
+    from repro.sharding.specs import mesh_axis_sizes
+
+    mesh, axis = layer_shard
+    axis_size = mesh_axis_sizes(mesh)[axis]
+    stack = 1
+    for d in packed_shape[:-2]:
+        stack *= d
+    stack_p = -(-stack // axis_size) * axis_size
+    return axis_size, stack, stack_p
+
+
+def _apply_layer_shard(x: jax.Array, layer_shard: tuple):
+    """Re-shard a packed (..., m, n) stack's flattened lead dim over the
+    layer_shard axis.
+
+    Returns the resharded ``(stack_padded, m, n)`` tensor plus the inverse
+    closure. Zero-padding is NS-exact (a zero matrix orthogonalizes to zero),
+    so the pad rows are sliced away afterwards.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh, axis = layer_shard
+    _, stack, stack_p = _layer_shard_dims(x.shape, layer_shard)
+    *lead, m, n = x.shape
+    x2 = x.reshape(stack, m, n)
+    if stack_p > stack:
+        x2 = jnp.concatenate(
+            [x2, jnp.zeros((stack_p - stack, m, n), x2.dtype)], axis=0
+        )
+    x2 = jax.lax.with_sharding_constraint(
+        x2, NamedSharding(mesh, PartitionSpec(axis, None, None))
+    )
+
+    def undo(o: jax.Array) -> jax.Array:
+        if stack_p > stack:
+            o = o[:stack]
+        return o.reshape(*lead, m, n)
+
+    return x2, undo
+
+
+def execute_ops(
+    ops: Sequence[BucketOp],
+    leaves: list,
+    orth: Callable,
+    *,
+    layer_shard: Optional[tuple] = None,
+) -> list:
+    """Interpret a phase's BucketOps over (possibly already-gathered) leaves.
+
+    Shared by the GSPMD path (called directly on global arrays) and the
+    shard_map engine (called on device-local arrays inside the region).
+    Returns the orthogonalized leaves in flat index order.
+    """
+    results: list = [None] * len(leaves)
+    for op in ops:
+        parts = [
+            bucketing_lib.partition_leaf(leaves[le.index], le.plan)
+            for le in op.leaves
+        ]
+        packed = bucketing_lib.pack_bucket(parts, op.mode)
+        undo = None
+        if op.comm is not None and op.comm.kind == "layer_shard":
+            packed, undo = _apply_layer_shard(packed, layer_shard)
+        orthed = orth(packed, strategy=op.kernel.strategy)
+        if undo is not None:
+            orthed = undo(orthed)
+        plans = [le.plan for le in op.leaves]
+        for le, out in zip(op.leaves, bucketing_lib.unpack_bucket(orthed, plans, op.mode)):
+            results[le.index] = out
+    missing = [i for i, r in enumerate(results) if r is None]
+    if missing:
+        raise AssertionError(f"program left leaves {missing} unorthogonalized")
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Compiler
+# ---------------------------------------------------------------------------
+
+
+def _spec_entries(spec, ndim: int) -> list:
+    ent = list(spec) if spec is not None else []
+    return ent + [None] * (ndim - len(ent))
+
+
+def _kernel_plan(
+    packed_shape: tuple, backend: Optional[str], strategy: Optional[str]
+) -> KernelPlan:
+    from repro.kernels import dispatch
+
+    name = backend if backend is not None else dispatch.get_backend()
+    if strategy is not None and strategy != "auto":
+        if strategy not in dispatch.STRATEGIES:
+            raise ValueError(
+                f"unknown NS strategy {strategy!r}; available: {dispatch.STRATEGIES}"
+            )
+        return KernelPlan(backend=name, strategy=strategy)
+    return KernelPlan(backend=name, strategy=dispatch.plan_strategy(packed_shape, name))
+
+
+def _packed_shape(plans: Sequence[bucketing_lib.LeafPlan], mode: str) -> tuple:
+    if len(plans) == 1:
+        return plans[0].block_shape
+    if mode == "concat":
+        units = sum(p.units for p in plans)
+        return (units, plans[0].block_shape[-2], plans[0].block_shape[-1])
+    return (len(plans), *plans[0].block_shape)
+
+
+def _gather_comm(
+    spec, shape: tuple, sizes: dict
+) -> Optional[CommOp]:
+    """Predicted tiled all-gather of the trailing dims (plan.py convention).
+
+    Mirrors ``engine._gather_trailing``: dim -2 then -1, per-device result
+    bytes growing as each dim fills in. Shard arithmetic comes from the
+    canonical ``sharding.specs`` helpers (late import: the sharding layer
+    is heavier than core and only needed at program-compile time).
+    """
+    from repro.sharding.specs import local_shape, spec_entry_names, spec_entry_size
+
+    entries = _spec_entries(spec, len(shape))
+    r = spec_entry_size(entries[-2], sizes)
+    c = spec_entry_size(entries[-1], sizes)
+    if r * c == 1:
+        return None
+    local = 1
+    for d in local_shape(spec, shape, sizes):
+        local *= d
+    collectives = []
+    axes: list[str] = []
+    for factor, entry in ((r, entries[-2]), (c, entries[-1])):
+        if factor > 1:
+            local *= factor
+            names = spec_entry_names(entry)
+            axes += list(names)
+            collectives.append(("all-gather", names, local * FP32_BYTES))
+    return CommOp(kind="gather", axes=tuple(axes), collectives=tuple(collectives))
+
+
+def _layer_shard_comm(
+    packed_shape: tuple, layer_shard: tuple
+) -> tuple[Optional[CommOp], tuple]:
+    """Price the layer_shard re-shard of a packed full-step stack.
+
+    Returns ``(comm_op, packed_shape)`` where the shape is what the kernel
+    will actually see after :func:`_apply_layer_shard` (flattened + padded
+    stack) — recorded once so pricing, kernel planning, and execution cannot
+    drift. Only stacks (ndim >= 3) are distributable — a single 2D matrix
+    has no layer dim to split. Predicted bytes are the per-device bytes of
+    the resharded input stack (one lead-dim re-shard; the output's implicit
+    re-replication is the partitioner's choice and is measured, not
+    predicted, by the HLO audit).
+    """
+    if len(packed_shape) < 3:
+        return None, packed_shape
+    axis_size, _, stack_p = _layer_shard_dims(packed_shape, layer_shard)
+    packed = (stack_p, packed_shape[-2], packed_shape[-1])
+    _, axis = layer_shard
+    if axis_size <= 1:
+        return CommOp(kind="layer_shard", axes=(axis,)), packed
+    per_device = (stack_p // axis_size) * packed_shape[-2] * packed_shape[-1]
+    comm = CommOp(
+        kind="layer_shard",
+        axes=(axis,),
+        collectives=(("reshard", (axis,), per_device * FP32_BYTES),),
+    )
+    return comm, packed
+
+
+def _compile_phase_gspmd(
+    leaf_specs: Sequence[LeafSpec],
+    phase: str,
+    *,
+    bucketing: bool,
+    backend: Optional[str],
+    strategy: Optional[str],
+    layer_shard: Optional[tuple],
+) -> PhaseProgram:
+    mode = "concat" if phase == "full" else "stack"
+    leaf_execs: list[LeafExec] = []
+    for i, ls in enumerate(leaf_specs):
+        blocked = phase == "block" and ls.blocked
+        spec2d = ls.block if blocked else None
+        plan = bucketing_lib.plan_leaf(ls.shape, ls.dtype, spec2d, mode)
+        m, n = int(ls.shape[-2]), int(ls.shape[-1])
+        eff = (m // ls.block.r, n // ls.block.c) if blocked else (m, n)
+        leaf_execs.append(LeafExec(index=i, plan=plan, eff_dims=eff))
+
+    buckets: dict = {}
+    for le in leaf_execs:
+        key = le.plan.key if bucketing else ("leaf", le.index)
+        buckets.setdefault(key, []).append(le)
+
+    ops = []
+    for key, members in buckets.items():
+        plans = [le.plan for le in members]
+        packed = _packed_shape(plans, mode)
+        comm = None
+        if layer_shard is not None and members[0].plan.spec is None:
+            # The fold of ``distribute_full``: full-step stacks (and
+            # unblocked stacked leaves on block steps) re-shard their layer
+            # dim so each rank orthogonalizes only its share.
+            comm, packed = _layer_shard_comm(packed, layer_shard)
+        ops.append(
+            BucketOp(
+                bucket_key=key,
+                leaves=tuple(members),
+                mode=mode,
+                kernel=_kernel_plan(packed, backend, strategy),
+                comm=comm,
+                packed_shape=packed,
+            )
+        )
+    return PhaseProgram(phase=phase, leaf_execs=tuple(leaf_execs), ops=tuple(ops))
+
+
+def _compile_phase_engine(
+    leaf_specs: Sequence[LeafSpec],
+    phase: str,
+    *,
+    bucketing: bool,
+    backend: Optional[str],
+    strategy: Optional[str],
+    engine: Any,
+) -> PhaseProgram:
+    """Engine mode: plan on device-local (post-gather) shapes.
+
+    Inside the shard_map region every array is local, so packing is always
+    ``concat`` (maximum batching) and bucket keys are local unit shapes.
+    """
+    from repro.sharding.specs import local_shape, spec_entry_size
+
+    sizes = dict(engine.axis_sizes)
+    mode = "concat"
+    leaf_execs: list[LeafExec] = []
+    for i, ls in enumerate(leaf_specs):
+        spec = engine.spec_for(ls.key, len(ls.shape))
+        entries = _spec_entries(spec, len(ls.shape))
+        r = spec_entry_size(entries[-2], sizes)
+        c = spec_entry_size(entries[-1], sizes)
+        shard_shape = local_shape(spec, ls.shape, sizes)
+        m, n = int(ls.shape[-2]), int(ls.shape[-1])
+        gather = None
+        if phase == "full" or not ls.blocked:
+            # Gather the trailing dims back to global; lead dims stay local
+            # (ZeRO-1 keeps each rank on its own layers).
+            gather = _gather_comm(spec, ls.shape, sizes)
+            body_shape = (*shard_shape[:-2], m, n)
+            spec2d = None
+            eff = (m, n)
+        else:
+            bs = ls.block
+            if bs.r % r or bs.c % c:
+                raise ValueError(
+                    f"block grid {bs} incompatible with shard grid ({r}, {c})"
+                )
+            rr, rc = bs.r // r, bs.c // c
+            body_shape = shard_shape
+            spec2d = blocking.BlockSpec2D(rr, rc) if rr * rc > 1 else None
+            eff = (m // bs.r, n // bs.c)
+        plan = bucketing_lib.plan_leaf(body_shape, ls.dtype, spec2d, mode)
+        leaf_execs.append(
+            LeafExec(index=i, plan=plan, eff_dims=eff, spec=spec, gather=gather)
+        )
+
+    buckets: dict = {}
+    for le in leaf_execs:
+        key = le.plan.key if bucketing else ("leaf", le.index)
+        buckets.setdefault(key, []).append(le)
+
+    ops = tuple(
+        BucketOp(
+            bucket_key=key,
+            leaves=tuple(members),
+            mode=mode,
+            kernel=_kernel_plan(
+                _packed_shape([le.plan for le in members], mode), backend, strategy,
+            ),
+            packed_shape=_packed_shape([le.plan for le in members], mode),
+        )
+        for key, members in buckets.items()
+    )
+    return PhaseProgram(phase=phase, leaf_execs=tuple(leaf_execs), ops=ops)
+
+
+def compile_program(
+    leaf_specs: Sequence[LeafSpec],
+    *,
+    bucketing: bool = True,
+    backend: Optional[str] = None,
+    strategy: Optional[str] = None,
+    engine: Optional[Any] = None,
+    layer_shard: Optional[tuple] = None,
+) -> UpdateProgram:
+    """Compile the two-phase :class:`UpdateProgram` from static leaf info.
+
+    Args:
+      leaf_specs: flat muon-leaf descriptions (order = the optimizer's flat
+        leaf order; non-muon leaves never reach the program).
+      bucketing: ``False`` compiles the degenerate one-bucket-per-leaf
+        program (the per-leaf reference path).
+      backend: resolved NS backend name for kernel planning (``None`` reads
+        the ``kernels.dispatch`` registry default at compile time).
+      strategy: pin every bucket's kernel strategy (``None``/"auto" derives
+        it per bucket from the packed shape via ``dispatch.plan_strategy``).
+      engine: optional ShardMapEngine (duck-typed: needs ``axis_sizes``,
+        ``spec_for`` and ``run_program``); compiles the explicit-comm
+        program executed inside one shard_map region per step.
+      layer_shard: optional ``(mesh, axis)`` — attach ``layer_shard``
+        CommOps to full-step stacks (GSPMD mode only; the engine gathers by
+        hand and ignores it).
+    """
+    if engine is not None and layer_shard is not None:
+        raise ValueError("layer_shard is a GSPMD-mode option; the engine "
+                         "schedules its own communication")
+    phases = {}
+    for phase in ("block", "full"):
+        if engine is not None:
+            phases[phase] = _compile_phase_engine(
+                leaf_specs, phase, bucketing=bucketing, backend=backend,
+                strategy=strategy, engine=engine,
+            )
+        else:
+            phases[phase] = _compile_phase_gspmd(
+                leaf_specs, phase, bucketing=bucketing, backend=backend,
+                strategy=strategy, layer_shard=layer_shard,
+            )
+    return UpdateProgram(
+        leaf_specs=tuple(leaf_specs), phases=phases, engine=engine,
+        layer_shard=layer_shard,
+    )

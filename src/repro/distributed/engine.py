@@ -21,35 +21,40 @@ which every collective is written out by hand, scheduled to match
     redundantly on every rank, and ``dynamic_slice`` the local shard back
     out. One gather per sharded leaf, nothing else.
 
-Inside the shard-local region the update composes with the bucketed/fused
-NS backend from ``core/bucketing.py`` + ``kernels/dispatch.py``: all leaves
-enter ONE shard_map call per step, and the body concat-packs them into one
-batched NS chain per distinct local shape — everything is device-local
-there, so even block steps get maximum batching (the GSPMD path must
-stack-pack to avoid resharding; the shard_map body has no such constraint).
+All of those decisions are made at *compile* time: ``core/program.py``
+builds the engine-mode :class:`UpdateProgram` from this engine's momentum
+PartitionSpecs (gather CommOps, residual block grids, device-local bucket
+plans, per-bucket kernel strategies), and :meth:`ShardMapEngine.run_program`
+merely executes one phase of it inside a single ``shard_map`` region —
+leaf gathers, the shared bucket interpreter (``program.execute_ops``),
+leaf slices. Inside the body everything is device-local, so buckets
+concat-pack into one batched NS chain per distinct local shape and run on
+the ``kernels/dispatch.py`` backend (fused-chain Pallas kernel when the
+bucket fits VMEM) — even block steps get maximum batching (the GSPMD
+program must stack-pack to avoid resharding; the shard_map body has no such
+constraint).
 
 ZeRO-1 composes transparently: the engine's in/out specs are the *momentum*
 specs (``sharding.specs.momentum_spec``), so a data-sharded leading stack
 dim simply makes the local NS batch smaller — full-step gathers move
 1/data_size of the bytes and each rank orthogonalizes only its own layers.
 
-``core.muon.muon(..., comm=engine)`` routes the update through
-:meth:`ShardMapEngine.orthogonalize`; the engine supersedes the
-``distribute_full`` GSPMD option when both are set.
+``core.muon.muon(..., comm=engine)`` compiles the update program against
+this engine; it supersedes the GSPMD ``layer_shard`` program option (the
+former ``distribute_full``), which is mutually exclusive with it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import blocking
-from repro.core import bucketing as bucketing_lib
+from repro.core import program as program_lib
 from repro.sharding import specs as sh
 from repro.sharding.specs import spec_entry_names as _names
 from repro.sharding.specs import spec_entry_size as _factor
@@ -97,12 +102,14 @@ def _slice_trailing(x: jax.Array, spec: P, sizes: dict[str, int]) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class ShardMapEngine:
-    """shard_map executor for the MuonBP update on one mesh.
+    """shard_map executor for compiled MuonBP update programs on one mesh.
 
     ``uspec_by_path`` maps param-tree path keys to the *momentum* spec of
     that leaf (param spec, plus the ZeRO-1 lead-dim data sharding when
     enabled) — the sharding the NS input ``u = g + mu*m`` arrives in and
-    the sharding the orthogonalized update leaves in.
+    the sharding the orthogonalized update leaves in. The program compiler
+    reads it via :meth:`spec_for` to plan gathers and device-local bucket
+    shapes.
     """
 
     mesh: Mesh
@@ -118,77 +125,40 @@ class ShardMapEngine:
             return P(*(None,) * ndim)
         return P(*_entries(spec, ndim)[:ndim])
 
-    def orthogonalize(
+    def run_program(
         self,
-        keys: Sequence[PathKey],
+        prog: program_lib.PhaseProgram,
         u_leaves: Sequence[jax.Array],
-        block_specs: Sequence[Optional[blocking.BlockSpec2D]],
-        orth: Callable[[jax.Array], jax.Array],
-        *,
-        phase: str,
-        bucketing: bool = True,
+        orth: Callable,
     ) -> list[jax.Array]:
-        """Orthogonalize every leaf in one shard_map region.
+        """Execute one compiled phase inside a single shard_map region.
 
-        ``orth`` is the leaf-level Newton-Schulz entry point (already bound
-        to steps/coeffs/backend); it runs on shard-local data only.
+        The program's leaf records carry this engine's momentum specs and
+        gather CommOps; the body gathers, interprets the BucketOps on
+        device-local data, and slices each gathered leaf's shard back out.
         """
         if not u_leaves:
             return []
         sizes = self.axis_sizes
-        specs = [self.spec_for(k, u.ndim) for k, u in zip(keys, u_leaves)]
-
-        gathers: list[bool] = []
-        residual: list[Optional[blocking.BlockSpec2D]] = []
-        for spec, u, bs in zip(specs, u_leaves, block_specs):
-            entries = _entries(spec, u.ndim)
-            r, c = _factor(entries[-2], sizes), _factor(entries[-1], sizes)
-            unblocked = bs is None or bs.num_blocks == 1
-            if phase == "full" or unblocked:
-                gathers.append(r * c > 1)
-                residual.append(None)
-            else:
-                # Block step: the shard is the block, up to a residual grid
-                # when the logical block spec is finer than the shard grid.
-                if bs.r % r or bs.c % c:
-                    raise ValueError(
-                        f"block grid {bs} incompatible with shard grid ({r}, {c})"
-                    )
-                rr, rc = bs.r // r, bs.c // c
-                gathers.append(False)
-                residual.append(blocking.BlockSpec2D(rr, rc) if rr * rc > 1 else None)
+        leaf_execs = prog.leaf_execs
+        specs = tuple(le.spec for le in leaf_execs)
 
         def body(*xs):
             ins = [
-                _gather_trailing(x, spec, sizes) if g else x
-                for x, spec, g in zip(xs, specs, gathers)
+                _gather_trailing(x, le.spec, sizes) if le.gather is not None else x
+                for x, le in zip(xs, leaf_execs)
             ]
-            if bucketing:
-                # Everything in the body is device-local, so concat-pack
-                # unconditionally: one batched NS chain per local shape.
-                outs = bucketing_lib.bucketed_orthogonalize(
-                    ins, residual, orth, mode="concat"
-                )
-            else:
-                outs = []
-                for x, rbs in zip(ins, residual):
-                    if rbs is not None:
-                        x = blocking.unpartition_blocks(
-                            orth(blocking.partition_blocks(x, rbs)), rbs
-                        )
-                    else:
-                        x = orth(x)
-                    outs.append(x)
+            outs = program_lib.execute_ops(prog.ops, ins, orth)
             return tuple(
-                _slice_trailing(o, spec, sizes) if g else o
-                for o, spec, g in zip(outs, specs, gathers)
+                _slice_trailing(o, le.spec, sizes) if le.gather is not None else o
+                for o, le in zip(outs, leaf_execs)
             )
 
         fn = shard_map(
             body,
             mesh=self.mesh,
-            in_specs=tuple(specs),
-            out_specs=tuple(specs),
+            in_specs=specs,
+            out_specs=specs,
             check_rep=False,
         )
         return list(fn(*u_leaves))

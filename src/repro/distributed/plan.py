@@ -145,7 +145,7 @@ def _plan_leaf(path: str, shape: tuple, spec: P, label: str,
             # Full step: sequential tiled all-gathers over dim -2 then -1,
             # mirroring engine._gather_trailing. Result bytes grow as each
             # dim fills in; the final slice-back is local (no collective).
-            local = elems // (d * r * c)
+            local = math.prod(sh.local_shape(uspec, shape, sizes)) or 1
             for dim_factor, entry in ((r, pspec_entries[-2]), (c, pspec_entries[-1])):
                 if dim_factor > 1:
                     local *= dim_factor

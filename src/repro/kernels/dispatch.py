@@ -6,15 +6,27 @@ same model/optimizer code can be A/B'd across backends:
 
   * ``"jnp"``    — the pure-jnp chain (XLA fuses it; the right default on
     CPU and the numerics oracle everywhere).
-  * ``"pallas"`` — the fused single-launch kernel (``newton_schulz/fused.py``)
-    when the working set fits VMEM, falling back to the 3-launch tiled
-    kernels (2D) or jnp (stacked, oversized). Interpret mode is selected
-    automatically off-TPU, so the pallas path is correct (if slow) on CPU.
+  * ``"pallas"`` — the Pallas kernels: the fused-chain kernel (all K NS
+    iterations in ONE launch) when the working set fits VMEM, else the
+    tiled 3-launch streaming path (2D matrices AND batched stacks).
+    Interpret mode is selected automatically off-TPU, so the pallas path
+    is correct (if slow) on CPU.
 
-Selection precedence: explicit ``backend=`` argument > ``set_backend()`` /
-``use_backend()`` override > ``REPRO_NS_BACKEND`` env var > ``"jnp"``.
-Backend resolution happens at trace time (the name is static), so switching
-backends retriggers jit specialization as expected.
+Selection has two static levels:
+
+  * **backend** — registry name. Precedence: explicit ``backend=`` argument
+    > ``set_backend()`` / ``use_backend()`` override > ``REPRO_NS_BACKEND``
+    env var > ``"jnp"``.
+  * **strategy** — which kernel within the backend (:data:`STRATEGIES`).
+    ``plan_strategy(shape, backend)`` derives the default from the shape at
+    compile time; the compiled :class:`repro.core.program.UpdateProgram`
+    records one strategy per bucket so the hot path never re-derives VMEM
+    fits. ``REPRO_NS_STRATEGY`` / an explicit ``strategy=`` pin it for A/Bs
+    (``fused_iter`` keeps the one-launch-per-iteration kernel reachable as
+    the fused-chain comparison point).
+
+Backend/strategy resolution happens at trace time (the names are static),
+so switching retriggers jit specialization as expected.
 """
 
 from __future__ import annotations
@@ -26,13 +38,17 @@ from typing import Callable, Optional
 import jax
 
 ENV_VAR = "REPRO_NS_BACKEND"
+STRATEGY_ENV_VAR = "REPRO_NS_STRATEGY"
+
+# Kernel strategies within a backend. "auto" defers to plan_strategy.
+STRATEGIES = ("auto", "jnp", "fused_chain", "fused_iter", "tiled")
 
 _REGISTRY: dict[str, Callable] = {}
 _override: Optional[str] = None
 
 
 def register_backend(name: str, fn: Callable) -> None:
-    """Register ``fn(g, steps, coeffs, eps) -> array`` under ``name``."""
+    """Register ``fn(g, steps, coeffs, eps, strategy) -> array`` under ``name``."""
     _REGISTRY[name] = fn
 
 
@@ -71,38 +87,82 @@ def use_backend(name: str):
         set_backend(prev)
 
 
-def orthogonalize(g, *, steps, coeffs, eps, backend: Optional[str] = None):
-    """Dispatch ``Orth(g)`` to the selected backend."""
+def plan_strategy(shape, backend: str) -> str:
+    """Static kernel plan for a (stacked) matrix shape under a backend.
+
+    This is the compile-time decision the UpdateProgram records per bucket:
+
+      * jnp backend       -> ``"jnp"`` (XLA fuses the chain itself)
+      * fits VMEM         -> ``"fused_chain"`` (all K iterations, ONE launch)
+      * oversized         -> ``"tiled"`` (3-launch HBM streaming; batched
+                             stacks loop the 2D path per matrix)
+
+    ``REPRO_NS_STRATEGY`` overrides the shape-derived choice for A/Bs.
+    """
+    env = os.environ.get(STRATEGY_ENV_VAR)
+    if env and env != "auto":
+        if env not in STRATEGIES:
+            raise ValueError(
+                f"unknown NS strategy {env!r}; available: {STRATEGIES}"
+            )
+        return env
+    if backend != "pallas":
+        return "jnp"
+    from repro.kernels.newton_schulz import fused
+
+    if fused.fits_vmem(shape):
+        return "fused_chain"
+    return "tiled"
+
+
+def orthogonalize(
+    g, *, steps, coeffs, eps, backend: Optional[str] = None,
+    strategy: Optional[str] = None,
+):
+    """Dispatch ``Orth(g)`` to the selected backend/strategy."""
     name = backend if backend is not None else get_backend()
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown NS backend {name!r}; available: {available_backends()}"
         )
-    return _REGISTRY[name](g, steps, coeffs, eps)
+    if strategy is not None and strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown NS strategy {strategy!r}; available: {STRATEGIES}"
+        )
+    return _REGISTRY[name](g, steps, coeffs, eps, strategy)
 
 
-def _jnp_backend(g, steps, coeffs, eps):
+def _jnp_backend(g, steps, coeffs, eps, strategy=None):
     from repro.core.newton_schulz import orthogonalize_jnp
 
     return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps)
 
 
-def _pallas_backend(g, steps, coeffs, eps):
+def _pallas_backend(g, steps, coeffs, eps, strategy=None):
     from repro.core.newton_schulz import orthogonalize_jnp
     from repro.kernels.newton_schulz import fused, ops
 
+    if strategy is None or strategy == "auto":
+        strategy = plan_strategy(g.shape, "pallas")
     interpret = jax.default_backend() != "tpu"
-    if fused.fits_vmem(g.shape):
+    if strategy == "jnp":
+        return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps)
+    if strategy in ("fused_chain", "fused_iter"):
         return fused.orthogonalize(
+            g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret,
+            chain=strategy == "fused_chain",
+        )
+    if strategy == "tiled":
+        if g.ndim == 2:
+            return ops.orthogonalize(
+                g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret
+            )
+        # Oversized stacks stream each matrix through the tiled 3-launch
+        # path (ROADMAP item: previously they silently fell back to jnp).
+        return ops.orthogonalize_batched(
             g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret
         )
-    if g.ndim == 2:
-        # Oversized single matrix: tiled 3-launch kernels stream through HBM.
-        return ops.orthogonalize(
-            g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret
-        )
-    # Oversized stacks have no tiled batched path yet (see ROADMAP).
-    return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps)
+    raise ValueError(f"unknown NS strategy {strategy!r}")
 
 
 register_backend("jnp", _jnp_backend)

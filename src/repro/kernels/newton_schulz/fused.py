@@ -1,4 +1,4 @@
-"""Fused, batched Newton-Schulz iteration: one ``pallas_call`` per NS step.
+"""Fused, batched Newton-Schulz: whole chains (or iterations) in one launch.
 
 The tiled kernels in ``newton_schulz.py`` execute one NS iteration as three
 chained launches (``matmul`` for the Gram matrix, two ``fma_matmul`` for the
@@ -11,6 +11,17 @@ into a single kernel: per grid step, one stacked matrix is read from HBM
 into VMEM once, the Gram matrix lives in an fp32 VMEM scratch accumulator,
 and only the final ``Y`` is written back — one HBM read and one HBM write
 per NS iteration instead of six round-trips.
+
+``orthogonalize(..., chain=True)`` goes one level further and runs **all K
+iterations inside ONE launch** (the ``fused_chain`` dispatch strategy): X
+stays resident in VMEM for the entire chain, so the K-step orthogonalization
+costs one HBM read and one HBM write *total* instead of per iteration —
+the per-iteration kernel round-trips X through HBM K-1 more times than
+necessary whenever the block fits VMEM for the whole chain (which is the
+same VMEM working set: the chain reuses the iteration's buffers in place).
+The per-iteration launcher (``chain=False`` / strategy ``"fused_iter"``)
+remains the A/B comparison point; ``benchmarks/ns_cost.py`` reports the
+launch-count and wall-time delta.
 
 Two structural optimizations:
 
@@ -49,14 +60,28 @@ DEFAULT_GRAM_TILE = 128
 # ~16 MiB/core; leave headroom for double-buffering the HBM<->VMEM streams).
 VMEM_BUDGET_BYTES = 12 * 2**20
 
+# Trace-time Pallas launch counter: every pallas_call this module issues
+# bumps it once per trace. Benchmarks/tests read the delta across a fresh
+# trace to demonstrate fused-chain (1 launch) vs per-iteration (K launches)
+# without parsing HLO.
+_launches = 0
 
-def _fused_ns_kernel(x_ref, out_ref, gram_ref, *, a, b, c, tm, nt):
-    """One full NS iteration on the (1, m_p, n_p) block in VMEM.
+
+def launch_count() -> int:
+    return _launches
+
+
+def _count_launch() -> None:
+    global _launches
+    _launches += 1
+
+
+def _ns_step(x: jax.Array, gram_ref, *, a, b, c, tm, nt) -> jax.Array:
+    """One NS iteration on an fp32 VMEM-resident (m_p, n_p) value.
 
     ``gram_ref`` is the fp32 VMEM accumulator for ``A = X X^T``; only
     upper-triangular tile pairs hit the MXU, the rest is mirrored.
     """
-    x = x_ref[0].astype(jnp.float32)
     for i in range(nt):
         xi = x[i * tm : (i + 1) * tm, :]
         for j in range(i, nt):
@@ -67,8 +92,26 @@ def _fused_ns_kernel(x_ref, out_ref, gram_ref, *, a, b, c, tm, nt):
                 gram_ref[j * tm : (j + 1) * tm, i * tm : (i + 1) * tm] = tile.T
     gram = gram_ref[...]
     poly = b * gram + c * jnp.dot(gram, gram, preferred_element_type=jnp.float32)
-    y = a * x + jnp.dot(poly, x, preferred_element_type=jnp.float32)
+    return a * x + jnp.dot(poly, x, preferred_element_type=jnp.float32)
+
+
+def _fused_ns_kernel(x_ref, out_ref, gram_ref, *, a, b, c, tm, nt):
+    """One full NS iteration on the (1, m_p, n_p) block in VMEM."""
+    y = _ns_step(x_ref[0].astype(jnp.float32), gram_ref, a=a, b=b, c=c, tm=tm, nt=nt)
     out_ref[0] = y.astype(out_ref.dtype)
+
+
+def _fused_ns_chain_kernel(x_ref, out_ref, gram_ref, *, a, b, c, tm, nt, steps):
+    """ALL ``steps`` NS iterations on the (1, m_p, n_p) block, one launch.
+
+    X never leaves VMEM between iterations — the unrolled chain reuses the
+    same Gram scratch, so the whole orthogonalization is one HBM read and
+    one HBM write per stacked matrix.
+    """
+    x = x_ref[0].astype(jnp.float32)
+    for _ in range(steps):
+        x = _ns_step(x, gram_ref, a=a, b=b, c=c, tm=tm, nt=nt)
+    out_ref[0] = x.astype(out_ref.dtype)
 
 
 def _padded_dims(m: int, n: int, tm: int) -> tuple[int, int, int]:
@@ -97,8 +140,40 @@ def _ns_iteration_padded(
 ) -> jax.Array:
     """Launch the fused kernel on an already tile-aligned ``(B, m_p, n_p)``."""
     bsz, mp, np_ = xp.shape
+    _count_launch()
     return pl.pallas_call(
         functools.partial(_fused_ns_kernel, a=a, b=b, c=c, tm=tm, nt=mp // tm),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, mp, np_), lambda i: (i, 0, 0), memory_space=pltpu.VMEM)
+        ],
+        out_specs=pl.BlockSpec(
+            (1, mp, np_), lambda i: (i, 0, 0), memory_space=pltpu.VMEM
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, mp, np_), xp.dtype),
+        scratch_shapes=[pltpu.VMEM((mp, mp), jnp.float32)],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xp)
+
+
+def _ns_chain_padded(
+    xp: jax.Array, a: float, b: float, c: float, tm: int, steps: int,
+    interpret: bool,
+) -> jax.Array:
+    """Launch the whole K-iteration chain on a tile-aligned ``(B, m_p, n_p)``.
+
+    One ``pallas_call`` total — identical VMEM working set to the single
+    iteration (X/Y block + Gram scratch + polynomial temporary), so the
+    ``fits_vmem`` gate applies unchanged.
+    """
+    bsz, mp, np_ = xp.shape
+    _count_launch()
+    return pl.pallas_call(
+        functools.partial(
+            _fused_ns_chain_kernel, a=a, b=b, c=c, tm=tm, nt=mp // tm,
+            steps=steps,
+        ),
         grid=(bsz,),
         in_specs=[
             pl.BlockSpec((1, mp, np_), lambda i: (i, 0, 0), memory_space=pltpu.VMEM)
@@ -147,7 +222,7 @@ def ns_iteration_batched(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("steps", "coeffs", "eps", "tm", "interpret")
+    jax.jit, static_argnames=("steps", "coeffs", "eps", "tm", "interpret", "chain")
 )
 def orthogonalize(
     g: jax.Array,
@@ -157,12 +232,17 @@ def orthogonalize(
     eps: float = 1e-7,
     tm: int = DEFAULT_GRAM_TILE,
     interpret: bool = False,
+    chain: bool = False,
 ) -> jax.Array:
     """Fused-kernel NS orthogonalization over the trailing two dims.
 
     Accepts arbitrary leading (stack) dims; matches
     ``core.newton_schulz.orthogonalize`` numerics — iterate on the smaller
     side, fro-normalize, fp32 internally, cast back at the end.
+
+    ``chain=True`` runs all ``steps`` iterations inside ONE Pallas launch
+    (X stays in VMEM for the whole chain); ``chain=False`` launches once
+    per iteration — same numerics, K-1 extra HBM round-trips of X.
     """
     if g.ndim < 2:
         raise ValueError(f"orthogonalize expects a matrix, got shape {g.shape}")
@@ -181,8 +261,11 @@ def orthogonalize(
     a, b, c = (float(v) for v in coeffs)
     tm_, mp, np_ = _padded_dims(m, n, tm)
     x = _pad_stack(x, mp, np_)
-    for _ in range(steps):
-        x = _ns_iteration_padded(x, a, b, c, tm_, interpret)
+    if chain:
+        x = _ns_chain_padded(x, a, b, c, tm_, steps, interpret)
+    else:
+        for _ in range(steps):
+            x = _ns_iteration_padded(x, a, b, c, tm_, interpret)
     x = x[:, :m, :n]
     if transpose:
         x = jnp.swapaxes(x, -1, -2)

@@ -121,14 +121,14 @@ def abstract_cache(cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16
 
 
 def make_optimizer(cfg: ModelConfig, mesh, a_params, pspecs, period=5,
-                   distribute_full=None, comm=None):
+                   layer_shard=None, comm=None):
     labels = label_tree(a_params)
     bspecs = sh.block_specs_for(a_params, pspecs, mesh)
     # Only pass block specs for muon-managed leaves (BlockSpec pytree must
     # match the masked tree; mask non-muon leaves to BlockSpec(1,1)).
     opt_muon = muon(1e-3, 1e-3, period=period, block_specs=jax.tree.map(
         lambda l, b: b if l == "muon" else None, labels, bspecs),
-        distribute_full=distribute_full, comm=comm)
+        layer_shard=layer_shard, comm=comm)
     return combine({"muon": opt_muon, "adamw": adamw(3e-4)}, labels)
 
 
@@ -140,11 +140,13 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
     """Build + lower the step function for one (cfg, shape) on a mesh.
 
     ``variant`` holds beyond-paper optimization knobs for the Perf loop:
-      distribute_full: bool — layer-distributed full-step NS over 'data'
+      distribute_full: bool — layer_shard program CommOp over 'data' for
+                              full-step stacks (GSPMD mode only)
       accum_steps: int      — gradient-accumulation microbatching
       ring_cache: bool      — window-sized ring KV cache for SWA decode
-      engine: str           — 'shard_map' routes the optimizer through the
-                              explicit distributed engine (distributed/)
+      engine: str           — optimizer comm engine; 'shard_map' (the
+                              default, repro.distributed) or 'gspmd' for
+                              the implicit-partitioner A/B
       zero1: bool           — first-class ZeRO-1 momentum sharding
     """
     v = variant or {}
@@ -154,12 +156,16 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
         a_params, pspecs = abstract_params(cfg, mesh, jnp.float32)
         zero1 = bool(v.get("zero1"))
         dist = (mesh, "data") if v.get("distribute_full") else None
+        # The explicit shard_map engine is the default distributed path
+        # (ROADMAP: its schedule matches CommPlan exactly; GSPMD drifts).
+        # layer_shard is a GSPMD-program option, so it implies gspmd mode.
+        engine_name = v.get("engine", "gspmd" if dist else "shard_map")
         comm = (
             make_engine(a_params, pspecs, mesh, zero1=zero1)
-            if v.get("engine") == "shard_map" else None
+            if engine_name == "shard_map" else None
         )
         optimizer = make_optimizer(cfg, mesh, a_params, pspecs, period=period,
-                                   distribute_full=dist, comm=comm)
+                                   layer_shard=dist, comm=comm)
         a_opt = jax.eval_shape(optimizer.init, a_params)
         a_opt = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a_opt)
         # momentum trees: reuse param shardings by structure-matching paths

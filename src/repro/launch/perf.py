@@ -35,9 +35,12 @@ def main():
     ap.add_argument("--flash-block-k", type=int, default=0)
     ap.add_argument("--zero1", action="store_true",
                     help="first-class ZeRO-1 momentum sharding (distributed.zero1)")
-    ap.add_argument("--engine", default="gspmd", choices=["gspmd", "shard_map"],
-                    help="optimizer comm engine: implicit GSPMD or the explicit "
-                         "shard_map engine (distributed.engine)")
+    ap.add_argument("--engine", default=None,
+                    choices=["shard_map", "gspmd"],
+                    help="optimizer comm engine (default: the explicit "
+                         "shard_map engine, distributed.engine; 'gspmd' keeps "
+                         "the implicit partitioner path for A/Bs; "
+                         "--distribute-full implies gspmd)")
     ap.add_argument("--bf16-grads", action="store_true")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -49,7 +52,16 @@ def main():
 
     from repro.launch.dryrun import lower_combo
 
-    variant = {}
+    # layer_shard (--distribute-full) is a GSPMD-program CommOp; the
+    # shard_map engine owns its own gather schedule, so the two are
+    # mutually exclusive — reject the explicit conflict rather than
+    # silently measuring the wrong engine.
+    if args.distribute_full and args.engine == "shard_map":
+        ap.error("--distribute-full requires the gspmd engine "
+                 "(layer_shard and the shard_map engine are mutually exclusive)")
+    engine = args.engine or ("gspmd" if args.distribute_full else "shard_map")
+
+    variant = {"engine": engine}
     if args.distribute_full:
         variant["distribute_full"] = True
     if args.accum_steps > 1:
@@ -62,8 +74,6 @@ def main():
         variant["flash_block_k"] = args.flash_block_k
     if args.zero1:
         variant["zero1"] = True
-    if args.engine != "gspmd":
-        variant["engine"] = args.engine
     if args.bf16_grads:
         variant["bf16_grads"] = True
 

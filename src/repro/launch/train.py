@@ -3,6 +3,9 @@
 Runs on whatever devices exist (CPU: 1-device mesh; TPU pod: pass
 --mesh-model/--mesh-data to match the slice). The MuonBP phase schedule is
 driven here: two compiled step functions, ``step % P == 0`` picks 'full'.
+The optimizer runs through the explicit shard_map comm engine by default
+(its schedule is asserted against CommPlan; ``--comm-engine gspmd`` keeps
+the implicit partitioner path for A/Bs).
 
 Example (CPU-scale):
   PYTHONPATH=src python -m repro.launch.train \
@@ -41,7 +44,8 @@ def build_optimizer(name, params, *, lr, adam_lr, period, schedule_fn=None,
     lr_s = schedule_fn(lr) if schedule_fn else lr
     adam_s = schedule_fn(adam_lr) if schedule_fn else adam_lr
     engine = engine if engine is not None else NSEngineConfig.from_env()
-    ns_kw = dict(bucketing=engine.bucketing, ns_backend=engine.backend, comm=comm)
+    ns_kw = dict(bucketing=engine.bucketing, ns_backend=engine.backend,
+                 ns_strategy=engine.strategy, comm=comm)
     if name == "adamw":
         return combine({"adamw": adamw(adam_s, weight_decay=weight_decay)},
                        jax.tree.map(lambda _: "adamw", labels)), None
@@ -78,11 +82,17 @@ def main():
     ap.add_argument("--schedule", default="wsd", choices=["wsd", "cosine", "const"])
     ap.add_argument("--ns-backend", default=None, choices=["jnp", "pallas"],
                     help="NS execution backend (default: REPRO_NS_BACKEND or jnp)")
+    ap.add_argument("--ns-strategy", default=None,
+                    choices=["auto", "jnp", "fused_chain", "fused_iter", "tiled"],
+                    help="pin the per-bucket NS kernel strategy (default: auto "
+                         "— the UpdateProgram picks per bucket)")
     ap.add_argument("--no-ns-bucketing", action="store_true",
                     help="disable shape-bucketed batched NS dispatch")
-    ap.add_argument("--comm-engine", default="gspmd", choices=["gspmd", "shard_map"],
-                    help="optimizer comm engine: implicit GSPMD or the explicit "
-                         "shard_map engine (repro.distributed)")
+    ap.add_argument("--comm-engine", default="shard_map",
+                    choices=["shard_map", "gspmd"],
+                    help="optimizer comm engine (default: the explicit "
+                         "shard_map engine, repro.distributed; 'gspmd' keeps "
+                         "the implicit partitioner path for A/Bs)")
     ap.add_argument("--zero1", action="store_true",
                     help="shard optimizer state over the data axis (ZeRO-1)")
     ap.add_argument("--seed", type=int, default=0)
@@ -113,6 +123,8 @@ def main():
     engine = NSEngineConfig.from_env()
     if args.ns_backend:
         engine = dataclasses.replace(engine, backend=args.ns_backend)
+    if args.ns_strategy:
+        engine = dataclasses.replace(engine, strategy=args.ns_strategy)
     if args.no_ns_bucketing:
         engine = dataclasses.replace(engine, bucketing=False)
     from repro.distributed import make_engine

@@ -113,6 +113,18 @@ def spec_entry_size(entry, sizes: dict[str, int]) -> int:
     return size
 
 
+def local_shape(spec: Optional[P], shape, sizes: dict[str, int]) -> tuple:
+    """Per-device shard shape of a tensor with PartitionSpec ``spec``.
+
+    The canonical global->local shape rule shared by the comm planner, the
+    shard_map engine, and the UpdateProgram compiler's engine mode (which
+    plans device-local bucket shapes from exactly this arithmetic).
+    """
+    entries = list(spec) if spec is not None else []
+    entries += [None] * (len(shape) - len(entries))
+    return tuple(d // spec_entry_size(e, sizes) for d, e in zip(shape, entries))
+
+
 def param_specs(params, cfg: ModelConfig, mesh: Mesh):
     """Pytree of PartitionSpec matching ``params``."""
     sizes = mesh_axis_sizes(mesh)

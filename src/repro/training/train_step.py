@@ -6,7 +6,11 @@ state are fp32.
 
 The MuonBP phase ('block' | 'full') is a *static* argument — the launcher
 compiles the step once per phase and alternates per ``step % P``
-(core/muon.py explains why this beats a lax.cond).
+(core/muon.py explains why this beats a lax.cond). Per phase the optimizer
+interprets its compiled ``UpdateProgram`` (core/program.py), so each of the
+two jitted step functions traces exactly one bucket schedule — the block
+step's zero-collective property and the full step's gather bytes are
+properties of the compiled artifact, asserted by the HLO audit.
 """
 
 from __future__ import annotations

@@ -75,13 +75,14 @@ def test_train_step_accum_runs(key):
     assert bool(jnp.isfinite(m["loss"]))
 
 
-def test_distributed_full_ns_single_device_math(key):
-    """distribute_full on a 1-device mesh must equal the plain full step
-    (padding + resharding are numerically inert)."""
+def test_layer_shard_full_ns_single_device_math(key):
+    """The layer_shard program CommOp (the folded-in distribute_full) on a
+    1-device mesh must equal the plain full step (padding + resharding are
+    numerically inert)."""
     mesh = jax.make_mesh((1,), ("data",))
     g = jax.random.normal(key, (3, 16, 24))  # stacked "layers"
     plain = muon_full(0.1, rms_match=False)
-    dist = muon(0.1, 0.1, period=1, rms_match=False, distribute_full=(mesh, "data"))
+    dist = muon(0.1, 0.1, period=1, rms_match=False, layer_shard=(mesh, "data"))
     s1, s2 = plain.init({"w": g}), dist.init({"w": g})
     u1, _ = plain.update({"w": g}, s1, {"w": jnp.zeros_like(g)}, "full")
     u2, _ = dist.update({"w": g}, s2, {"w": jnp.zeros_like(g)}, "full")
