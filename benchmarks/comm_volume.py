@@ -11,8 +11,11 @@ Two measurement families:
     is compiled per (engine x phase x zero1) and its post-SPMD collective
     schedule is reported next to ``distributed.plan.CommPlan``'s prediction
     — rows carry the ``engine``/``predicted_bytes``/``measured_collectives``
-    columns for eyeballing drift. The *enforced* plan-vs-HLO gate lives in
-    tests/test_distributed_engine.py (run by ci.sh's multi-device smoke
+    columns for eyeballing drift, and the ``schedule`` column A/Bs the
+    shard_map full step's barrier vs pipelined execution (same bytes by
+    contract — the pipeline reorders communication, never adds to it). The
+    *enforced* plan-vs-HLO gate lives in tests/test_distributed_engine.py
+    and tests/test_update_program.py (run by ci.sh's multi-device smoke
     step); this module is the measurement/reporting surface. A
     bucketing=off row keeps the ROADMAP "bucketing x sharding" A/B visible.
 """
@@ -59,9 +62,11 @@ labels = label_tree(a_params)
 bspecs = sh.block_specs_for(a_params, pspecs, mesh)
 bspecs = jax.tree.map(lambda l, b: b if l == "muon" else None, labels, bspecs)
 
-def opt_for(engine="gspmd", zero1=False, bucketing=True, matrix=muon):
+def opt_for(engine="gspmd", zero1=False, bucketing=True, matrix=muon,
+            full_schedule=None):
     comm = make_engine(a_params, pspecs, mesh, zero1=zero1) if engine == "shard_map" else None
-    m = matrix(1e-3, block_specs=bspecs, comm=comm, bucketing=bucketing)
+    m = matrix(1e-3, block_specs=bspecs, comm=comm, bucketing=bucketing,
+               full_schedule=full_schedule)
     return combine({"muon": m, "adamw": adamw(1e-3)}, labels)
 
 def measure_train(matrix_opt, phase):
@@ -81,8 +86,9 @@ def measure_train(matrix_opt, phase):
     coll = audit_lib.parse_collectives(compiled.as_text())
     return sum(v["bytes"] for v in coll.values())
 
-def measure_update(engine, phase, zero1=False, bucketing=True):
-    opt = opt_for(engine, zero1=zero1, bucketing=bucketing)
+def measure_update(engine, phase, zero1=False, bucketing=True, full_schedule=None):
+    opt = opt_for(engine, zero1=zero1, bucketing=bucketing,
+                  full_schedule=full_schedule)
     a_opt = jax.eval_shape(opt.init, a_params)
     a_opt = z1.attach(a_opt, a_params, mesh, zero1=zero1)
     upd_sh = jax.tree.map(
@@ -101,6 +107,10 @@ out = {"plan": {ph: plan.predicted_bytes(ph) for ph in ("block", "full", "apply"
 for engine in ("gspmd", "shard_map"):
     for phase in ("block", "full"):
         out["update"][f"{engine}_{phase}"] = measure_update(engine, phase)
+# the full-step schedule A/B: pipelined (the shard_map_full default above)
+# must move exactly the bytes the barrier body does — just reordered.
+out["update"]["shard_map_full_barrier"] = measure_update(
+    "shard_map", "full", full_schedule="barrier")
 out["update"]["shard_map_block_zero1"] = measure_update("shard_map", "block", zero1=True)
 out["update"]["shard_map_full_zero1"] = measure_update("shard_map", "full", zero1=True)
 out["update"]["gspmd_block_nobucket"] = measure_update("gspmd", "block", bucketing=False)
@@ -136,6 +146,7 @@ def run(quick: bool = False) -> list[str]:
     plan_for = {
         "gspmd_block": ("plan", "block"), "gspmd_full": ("plan", "full"),
         "shard_map_block": ("plan", "block"), "shard_map_full": ("plan", "full"),
+        "shard_map_full_barrier": ("plan", "full"),
         "shard_map_block_zero1": ("plan_zero1", "block"),
         "shard_map_full_zero1": ("plan_zero1", "full"),
         "gspmd_block_nobucket": ("plan", "block"),
@@ -143,12 +154,16 @@ def run(quick: bool = False) -> list[str]:
     for name, rec in r["update"].items():
         plan_key, phase = plan_for[name]
         engine = "shard_map" if name.startswith("shard_map") else "gspmd"
+        schedule = "-"
+        if engine == "shard_map" and phase == "full":
+            schedule = "barrier" if name.endswith("barrier") else "pipelined"
         rows.append(row(
             f"comm_opt_update_{name}", 0.0, f"{rec['bytes']}B",
             bucketing="off" if name.endswith("nobucket") else "on",
             engine=engine,
             predicted_bytes=str(r[plan_key][phase]),
             measured_collectives=str(rec["count"]),
+            schedule=schedule,
         ))
     # The ZeRO-1 apply-time gather is priced by the plan but sits outside
     # optimizer.update — surface it so the trade stays visible.

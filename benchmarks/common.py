@@ -20,16 +20,24 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
+COLUMNS = (
+    "name", "us_per_call", "derived", "backend", "bucketing",
+    "engine", "predicted_bytes", "measured_collectives", "schedule",
+)
+
+
 def row(
     name: str, us: float, derived: str, backend: str = "-", bucketing: str = "-",
     engine: str = "-", predicted_bytes: str = "-", measured_collectives: str = "-",
+    schedule: str = "-",
 ) -> str:
     """CSV row; ``backend``/``bucketing`` identify the NS engine variant
     measured ("jnp"/"pallas", "on"/"off"); ``engine`` names the optimizer
     comm engine ("gspmd"/"shard_map"); ``predicted_bytes`` is the CommPlan
     prediction and ``measured_collectives`` the post-SPMD HLO count for the
-    same compile — "-" where not applicable."""
+    same compile; ``schedule`` names the engine full-step schedule
+    ("barrier"/"pipelined") — "-" where not applicable."""
     return (
         f"{name},{us:.1f},{derived},{backend},{bucketing},"
-        f"{engine},{predicted_bytes},{measured_collectives}"
+        f"{engine},{predicted_bytes},{measured_collectives},{schedule}"
     )

@@ -6,7 +6,13 @@ the shape-bucketed batched NS engine (bucketing=on, the default: one NS
 chain per distinct unit shape) and with per-leaf dispatch (bucketing=off) —
 so the engine win shows up as a column-wise A/B on identical numerics. The
 backend column records the NS execution backend (jnp on CPU; the pallas
-interpret path is a correctness artifact benchmarked in ns_cost)."""
+interpret path is a correctness artifact benchmarked in ns_cost).
+
+The shard_map-engine full step is additionally measured once per execution
+schedule (``schedule`` column: barrier vs pipelined) on the local 1-device
+mesh — identical numerics and zero collectives at this scale, so the row
+pair isolates the pipeline body's dispatch overhead; the multi-device
+byte-level A/B lives in comm_volume."""
 
 from __future__ import annotations
 
@@ -68,4 +74,29 @@ def run(quick: bool = False) -> list[str]:
                 row(f"opt_step_{name}", us, f"{n_params/1e6:.1f}M_params",
                     backend=backend, bucketing=bucket_label)
             )
+
+    # shard_map engine full step, once per schedule (barrier vs pipelined).
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import make_engine
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pspecs = jax.tree.map(lambda p: P(*(None,) * p.ndim), params)
+    for sched in ("barrier", "pipelined"):
+        engine = make_engine(params, pspecs, mesh)
+        matrix_opt = muon(1e-3, block_specs=blocks, comm=engine,
+                          ns_backend="jnp", full_schedule=sched)
+        opt = combine({"muon": matrix_opt, "adamw": adamw(1e-3)}, labels)
+        state = opt.init(params)
+
+        @jax.jit
+        def estep(g, s, p, _opt=opt):
+            return _opt.update(g, s, p, "full")
+
+        us = timeit(estep, grads, state, params, warmup=1, iters=3)
+        rows.append(
+            row("opt_step_muonbp_full_engine", us, f"{n_params/1e6:.1f}M_params",
+                backend="jnp", bucketing="on", engine="shard_map",
+                schedule=sched)
+        )
     return rows

@@ -13,6 +13,12 @@ for the paper artifact it reproduces):
   two_stepsize   — Theorem 2: tied vs untied stepsizes
   roofline       — Sec Roofline: terms per (arch x shape x mesh) from dryrun
 
+A ``--quick`` pass over the full module list also writes a ``BENCH_pr4.json``
+perf snapshot (rows + computed regression markers) so the repo carries a
+bench trajectory; ``scripts/ci.sh`` fails when any *tracked* ``BENCH_*.json``
+carries a non-empty ``regressions`` list. ``--bench-json PATH`` overrides
+the snapshot path (pass ``''`` to disable).
+
 Env: REPRO_BENCH_QUICK=1 (or ``--quick``) for a fast pass;
 REPRO_BENCH_ONLY=mod1,mod2 (or ``--only mod1,mod2``) to filter.
 """
@@ -20,10 +26,13 @@ REPRO_BENCH_ONLY=mod1,mod2 (or ``--only mod1,mod2``) to filter.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
 import traceback
+
+from benchmarks.common import COLUMNS
 
 MODULES = [
     "ns_cost",
@@ -37,26 +46,108 @@ MODULES = [
     "roofline",
 ]
 
+BENCH_SNAPSHOT = "BENCH_pr4.json"
+
+
+def parse_rows(lines: list[str]) -> list[dict]:
+    out = []
+    for line in lines:
+        parts = line.split(",")
+        rec = dict(zip(COLUMNS, parts + ["-"] * (len(COLUMNS) - len(parts))))
+        out.append(rec)
+    return out
+
+
+def find_regressions(rows: list[dict]) -> list[str]:
+    """Deterministic regression markers over one benchmark pass.
+
+    Timing columns are too noisy on CPU to gate on; the markers are the
+    byte-level contracts the engine is built around:
+
+      * a module crashed (``*_FAILED`` row);
+      * a shard_map row whose measured collective bytes (the ``derived``
+        ``<n>B`` column) disagree with ``predicted_bytes`` — the engine's
+        schedule is specified to match CommPlan *exactly*;
+      * a pipelined full step moving more bytes than its barrier A/B —
+        the pipeline must reorder communication, never add to it.
+    """
+    regs: list[str] = []
+    by_sched: dict[tuple, dict[str, int]] = {}
+    for r in rows:
+        name = r["name"]
+        if name.endswith("_FAILED"):
+            regs.append(f"{name}: module error")
+            continue
+        derived = r.get("derived", "-")
+        if (r.get("engine") == "shard_map" and r.get("predicted_bytes", "-") != "-"
+                and derived.endswith("B") and derived[:-1].isdigit()):
+            measured, predicted = int(derived[:-1]), int(r["predicted_bytes"])
+            if measured != predicted:
+                regs.append(
+                    f"{name}: measured {measured} B != predicted {predicted} B"
+                )
+            sched = r.get("schedule", "-")
+            if sched in ("barrier", "pipelined"):
+                base = name.replace("_barrier", "").replace("_pipelined", "")
+                by_sched.setdefault((base, r.get("bucketing")), {})[sched] = measured
+    for (base, _), pair in by_sched.items():
+        if len(pair) == 2 and pair["pipelined"] > pair["barrier"]:
+            regs.append(
+                f"{base}: pipelined moves {pair['pipelined']} B > barrier "
+                f"{pair['barrier']} B"
+            )
+    return regs
+
+
+def write_snapshot(path: str, rows: list[dict], quick: bool) -> None:
+    snap = {
+        "schema": 1,
+        "pr": 4,
+        "quick": quick,
+        "columns": list(COLUMNS),
+        "rows": rows,
+        "regressions": find_regressions(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(rows)} rows, "
+          f"{len(snap['regressions'])} regression marker(s))", file=sys.stderr)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="fast smoke pass")
     ap.add_argument("--only", default=None, help="comma-separated module list")
+    ap.add_argument("--bench-json", default=None,
+                    help="write a JSON snapshot of the rows + regression "
+                         "markers ('' disables; default: BENCH_pr4.json on a "
+                         "full --quick pass)")
     args = ap.parse_args()
     quick = args.quick or os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
     only = args.only or os.environ.get("REPRO_BENCH_ONLY")
     mods = only.split(",") if only else MODULES
-    print("name,us_per_call,derived,backend,bucketing,engine,predicted_bytes,measured_collectives")
+    print(",".join(COLUMNS))
+    lines: list[str] = []
     for name in mods:
         t0 = time.time()
         try:
             module = __import__(f"benchmarks.{name}", fromlist=["run"])
             for line in module.run(quick=quick):
+                lines.append(line)
                 print(line, flush=True)
         except Exception:
             traceback.print_exc(file=sys.stderr)
-            print(f"{name}_FAILED,0.0,see_stderr,-,-,-,-,-", flush=True)
+            line = f"{name}_FAILED,0.0,see_stderr,-,-,-,-,-,-"
+            lines.append(line)
+            print(line, flush=True)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
+
+    snap_path = args.bench_json
+    if snap_path is None and quick and not only:
+        snap_path = os.path.join(os.path.dirname(__file__), "..", BENCH_SNAPSHOT)
+    if snap_path:
+        write_snapshot(snap_path, parse_rows(lines), quick)
 
 
 if __name__ == "__main__":

@@ -17,18 +17,47 @@ if git ls-files '*.pyc' '*.pyo' | grep .; then
     exit 1
 fi
 
+echo "== tracked bench snapshots =="
+# BENCH_*.json perf snapshots (benchmarks/run.py --quick) carry computed
+# regression markers; a tracked snapshot with a non-empty list fails here.
+python - <<'PY'
+import json, subprocess, sys
+files = subprocess.run(["git", "ls-files", "BENCH_*.json"],
+                       capture_output=True, text=True).stdout.split()
+bad = False
+for f in files:
+    regs = json.load(open(f)).get("regressions", [])
+    if regs:
+        print(f"{f}: regression markers: {regs}", file=sys.stderr)
+        bad = True
+print(f"checked {len(files)} tracked snapshot(s)")
+sys.exit(1 if bad else 0)
+PY
+
 echo "== tier-1 tests =="
 python -m pytest -x -q -m "not slow"
 
-echo "== distributed engine multi-device smoke (8 host devices) =="
 # Comm-plan math, shard_map/GSPMD parity, zero-collective block-step HLO
-# audits, plan-matching full-step bytes, ZeRO-1 sharded checkpoint round-trip.
-# The engine/checkpoint tests force the device count in their own
-# subprocesses; the XLA_FLAGS here covers any future in-process additions.
+# audits, plan-matching full-step bytes, ZeRO-1 sharded checkpoint round-trip
+# — once per full-step schedule (REPRO_FULL_SCHEDULE drives every muon()
+# built without an explicit full_schedule=). The engine/checkpoint tests
+# force the device count in their own subprocesses; the XLA_FLAGS here
+# covers any future in-process additions.
+for sched in barrier pipelined; do
+    echo "== distributed engine multi-device smoke (8 host devices, full_schedule=$sched) =="
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    REPRO_FULL_SCHEDULE=$sched python -m pytest -q \
+        tests/test_distributed_plan.py \
+        tests/test_distributed_engine.py \
+        tests/test_distributed_checkpoint.py
+done
+
+echo "== pipelined-vs-barrier parity + schedule audit (8 host devices) =="
+# The subprocess inside tests both schedules explicitly (bitwise parity
+# across phases x zero1 x bucketing + per-stage gather attribution), so one
+# pass suffices regardless of REPRO_FULL_SCHEDULE.
 XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m pytest -q \
-    tests/test_distributed_plan.py \
-    tests/test_distributed_engine.py \
-    tests/test_distributed_checkpoint.py
+    tests/test_update_program.py -m slow
 
 echo "== quick benchmarks (ns_cost, optimizer_step) =="
 out=$(REPRO_BENCH_ONLY=ns_cost,optimizer_step python -m benchmarks.run --quick)

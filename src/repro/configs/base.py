@@ -123,13 +123,18 @@ class NSEngineConfig:
     "fused_iter" keeps the one-launch-per-iteration kernel for A/Bs);
     ``bucketing`` toggles the shape-bucketed program in ``core/program.py``
     (one NS chain per distinct unit shape instead of one per parameter
-    leaf). Env overrides: ``REPRO_NS_BACKEND``, ``REPRO_NS_STRATEGY``,
-    ``REPRO_NS_BUCKETING=0``.
+    leaf); ``full_schedule`` picks the engine-mode full-step execution
+    schedule ("pipelined": per-bucket gathers overlapped with the NS of
+    already-resident buckets, the default; "barrier": the gather-all /
+    NS-all / slice-all A/B, also what GSPMD-mode programs always do). Env
+    overrides: ``REPRO_NS_BACKEND``, ``REPRO_NS_STRATEGY``,
+    ``REPRO_NS_BUCKETING=0``, ``REPRO_FULL_SCHEDULE``.
     """
 
     backend: str = "jnp"          # "jnp" | "pallas"
     strategy: str = "auto"        # "auto" | "jnp" | "fused_chain" | "fused_iter" | "tiled"
     bucketing: bool = True
+    full_schedule: str = "pipelined"  # "pipelined" | "barrier"
 
     @classmethod
     def from_env(cls) -> "NSEngineConfig":
@@ -140,6 +145,7 @@ class NSEngineConfig:
             strategy=os.environ.get("REPRO_NS_STRATEGY", cls.strategy),
             bucketing=os.environ.get("REPRO_NS_BUCKETING", "1").lower()
             not in ("0", "false", "off"),
+            full_schedule=os.environ.get("REPRO_FULL_SCHEDULE", cls.full_schedule),
         )
 
 

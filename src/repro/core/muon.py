@@ -108,6 +108,7 @@ def muon(
     ns_strategy: Optional[str] = None,
     comm: Optional[Any] = None,
     layer_shard: Optional[tuple] = None,
+    full_schedule: Optional[str] = None,
 ) -> Optimizer:
     """Build the Muon-family optimizer (paper Algorithm 1).
 
@@ -137,20 +138,36 @@ def muon(
         steps schedule one hand-written all-gather per sharded leaf
         (momentum shards -> full NS -> local slice) — instead of relying on
         the GSPMD partitioner.
-      layer_shard: optional ``(mesh, axis_name)`` (GSPMD mode only; mutually
-        exclusive with ``comm``). Beyond-paper optimization of the FULL
-        step: the paper notes a naive all-gather "would force us to
-        orthogonalize the same matrix in parallel which is redundant"
+      layer_shard: optional ``(mesh, axis_name)``. Beyond-paper optimization
+        of the FULL step: the paper notes a naive all-gather "would force
+        us to orthogonalize the same matrix in parallel which is redundant"
         (Sec 2.2). The program attaches a ``layer_shard`` CommOp to every
-        full-step stack: the packed per-layer matrices re-shard their layer
+        full-step stack: the packed per-layer matrices split their layer
         dim over ``axis_name`` (padding to a multiple when needed) so each
         rank orthogonalizes only its share of layers (Liu et al. 2025
-        Distributed-Muon, expressed in GSPMD), cutting full-step NS FLOPs
-        and gather traffic by ~axis_size.
+        Distributed-Muon), cutting full-step NS FLOPs by ~axis_size. With
+        ``comm=`` the split executes explicitly inside the shard_map body
+        (local slice -> NS share -> one priced all-gather); without it,
+        as a GSPMD re-shard priced by the measured partitioner model.
+      full_schedule: engine-mode full-step execution schedule —
+        ``'pipelined'`` (the default) compiles per-bucket gathers
+        overlapped with the NS of already-resident buckets
+        (double-buffered); ``'barrier'`` keeps the gather-all/NS-all/
+        slice-all body for A/Bs. ``None`` reads ``REPRO_FULL_SCHEDULE``
+        and falls back to ``'pipelined'``. GSPMD programs ignore it.
     """
     lr_full_fn = _as_schedule(lr_full)
     lr_block_fn = _as_schedule(lr_block if lr_block is not None else lr_full)
     mu = momentum
+    if full_schedule is None:
+        import os
+
+        full_schedule = os.environ.get("REPRO_FULL_SCHEDULE", "pipelined")
+    if full_schedule not in program_lib.FULL_SCHEDULES:
+        raise ValueError(
+            f"full_schedule must be one of {program_lib.FULL_SCHEDULES}, "
+            f"got {full_schedule!r}"
+        )
 
     # Path-keyed block-spec lookup: robust to masked (None-leaf) param trees
     # from `combine` even when block_specs covers all leaves.
@@ -178,6 +195,8 @@ def muon(
                 strategy=ns_strategy,
                 engine=comm,
                 layer_shard=layer_shard,
+                full_schedule=full_schedule,
+                ns_steps=ns_steps,
             )
         return programs[cache_key]
 

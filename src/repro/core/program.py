@@ -15,8 +15,11 @@ backend), and recorded as a program that ``muon.update`` merely interprets:
             ├── leaf_execs: per-leaf static record — pack plan, RMS-matching
             │               effective dims, momentum spec, optional gather
             │               CommOp (shard_map engine full steps)
-            └── ops: ordered BucketOps, each
-                  pack -> [bucket comm] -> orthogonalize(kernel plan) -> unpack
+            ├── ops: ordered BucketOps, each
+            │     pack -> [bucket comm] -> orthogonalize(kernel plan) -> unpack
+            └── schedule: engine-mode full steps only — the compiled
+                  per-bucket :class:`PipelineSchedule` (gather bucket i+1,
+                  orthogonalize bucket i, slice bucket i-1 back; see below)
 
 Per ``BucketOp`` the pipeline is:
 
@@ -51,6 +54,24 @@ program with leaf CommOps, executed inside ``ShardMapEngine.run_program``'s
 single shard_map region. Numerics are identical across all configurations
 (asserted in tests/test_update_program.py and the 8-device distributed
 suite).
+
+**The full-step pipeline schedule.** Engine-mode full steps used to execute
+as three global barriers — gather *every* sharded leaf, run *all* NS
+buckets, slice everything back — which serializes exactly the gather
+latency the paper's P-periodic schedule amortizes. With
+``full_schedule='pipelined'`` (the engine default) the compiler emits an
+explicit :class:`PipelineSchedule`: buckets are ordered so the largest
+gathers are issued first, and each :class:`PipelineStage` issues the
+gathers of bucket *i+1*, orthogonalizes bucket *i* (hiding the in-flight
+gather behind its NS chain), and slices bucket *i−1*'s results back to
+shard layout. The executed body is double-buffered — at most two buckets'
+gathered momentum is live, enforced with ``lax.optimization_barrier``
+(gather *i+1* cannot issue before NS *i−1* retires) — and each stage is
+priced by ``distributed/plan.py``: predicted exposed bytes are
+``max(0, gather_bytes − overlappable_ns_bytes(compute op))``.
+``full_schedule='barrier'`` keeps the three-barrier body as the A/B, and
+GSPMD-mode programs (no explicit gathers to schedule) always compile
+without a schedule.
 """
 
 from __future__ import annotations
@@ -67,16 +88,25 @@ from repro.core import bucketing as bucketing_lib
 PathKey = tuple[str, ...]
 FP32_BYTES = 4  # NS inputs are fp32 (momentum dtype) — plan.py convention
 
+# Full-phase execution schedules (engine mode): 'barrier' gathers every
+# leaf, runs every bucket, slices everything back; 'pipelined' overlaps
+# per-bucket gathers with the NS of already-resident buckets.
+FULL_SCHEDULES = ("barrier", "pipelined")
+
 __all__ = [
     "LeafSpec",
     "CommOp",
     "KernelPlan",
     "LeafExec",
     "BucketOp",
+    "PipelineStage",
+    "PipelineSchedule",
     "PhaseProgram",
     "UpdateProgram",
+    "FULL_SCHEDULES",
     "compile_program",
     "execute_ops",
+    "execute_op",
 ]
 
 
@@ -112,10 +142,14 @@ class CommOp:
         (matrix) dims inside the shard_map region (engine full steps, and
         block steps for sharded leaves with no usable block grid). The
         matching local ``dynamic_slice`` after NS is free (no collective).
-      * ``'layer_shard'`` — bucket-level GSPMD re-shard of the packed
-        stack's leading dim over ``axes[0]`` so full-step NS FLOPs divide
-        by the axis size (the old ``distribute_full``, folded into the
-        program).
+      * ``'layer_shard'`` — bucket-level split of the packed stack's
+        leading dim over ``axes[0]`` so full-step NS FLOPs divide by the
+        axis size (the old ``distribute_full``, folded into the program).
+        In GSPMD mode it executes as a ``with_sharding_constraint``
+        re-shard priced by the measured partitioner model
+        (``plan.layer_shard_collectives(mode='gspmd')``); in engine mode it
+        is explicit — local layer slice, NS on the share, one priced
+        all-gather inside the shard_map body (``mode='engine'``).
 
     ``collectives`` are ``(op, axes, per_device_result_bytes)`` tuples in
     the exact convention of ``distributed.plan.Collective`` so
@@ -138,11 +172,15 @@ class KernelPlan:
 
     ``strategy`` is one of ``kernels.dispatch.STRATEGIES`` — decided once at
     compile time from the packed shape, so the per-step interpreter never
-    re-derives VMEM fits.
+    re-derives VMEM fits. ``merged_dtypes`` records a cross-bucket launch
+    merge (``dispatch.shared_launch_groups``): buckets with the same unit
+    shape but different dtypes share this one launch, cast to the promoted
+    compute dtype on pack and back per leaf on unpack.
     """
 
     backend: str
     strategy: str
+    merged_dtypes: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,13 +190,18 @@ class LeafExec:
     index: int                              # position in the flat muon-leaf list
     plan: bucketing_lib.LeafPlan            # pack plan on the in-body shape
     eff_dims: tuple[int, int]               # RMS-matching dims for this phase
+    dtype: str = "float32"                  # leaf dtype (cast-epilogue target)
     spec: Optional[Any] = None              # normalized momentum PartitionSpec
     gather: Optional[CommOp] = None         # engine-mode pre-pack gather
 
 
 @dataclasses.dataclass(frozen=True)
 class BucketOp:
-    """One pack -> comm -> orthogonalize -> unpack step of a phase."""
+    """One pack -> comm -> orthogonalize -> unpack step of a phase.
+
+    ``compute_dtype`` is set only for cross-bucket launch merges: members
+    cast to it before packing and back to their own dtype after unpacking.
+    """
 
     bucket_key: tuple
     leaves: tuple[LeafExec, ...]
@@ -166,6 +209,84 @@ class BucketOp:
     kernel: KernelPlan
     comm: Optional[CommOp] = None           # bucket-level layer_shard
     packed_shape: tuple = ()                # shape the kernel actually sees
+    compute_dtype: Optional[str] = None     # launch-merge cast target
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineStage:
+    """One stage of the pipelined full step: gather i+1 / NS i / slice i−1.
+
+    ``gathers`` and ``writeback`` are flat leaf indices; ``compute`` indexes
+    ``PhaseProgram.ops``. Pricing follows ``distributed/plan.py``'s
+    result-buffer byte convention: ``gather_bytes`` is what the gathers
+    issued at this stage move, ``overlap_bytes`` is what the concurrent NS
+    chain can hide (``plan.overlappable_ns_bytes``), and the *exposed* bytes
+    — the schedule's figure of merit — are their clamped difference.
+    ``compute_comm_bytes`` is bucket-level comm the compute op itself issues
+    (engine layer_shard all-gathers), reported separately because it
+    overlaps the NEXT stage's compute, not this one's.
+    """
+
+    index: int
+    gathers: tuple[int, ...]
+    compute: Optional[int]
+    writeback: tuple[int, ...]
+    gather_bytes: int = 0
+    overlap_bytes: int = 0
+    compute_comm_bytes: int = 0
+
+    @property
+    def exposed_bytes(self) -> int:
+        return max(0, self.gather_bytes - self.overlap_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSchedule:
+    """The compiled full-step pipeline: bucket order + double-buffered stages.
+
+    ``order`` is the ops[] execution order — buckets sorted so the largest
+    gathers issue first and gather-free (VMEM-resident) buckets run last,
+    filling the overlap bubbles. Stage *s* issues the gathers of
+    ``order[s]``, orthogonalizes ``order[s-1]``, and writes back
+    ``order[s-2]`` — so the body keeps at most two buckets' gathered
+    momentum live (double-buffering, enforced by the executor with
+    ``lax.optimization_barrier``).
+    """
+
+    order: tuple[int, ...]
+    stages: tuple[PipelineStage, ...]
+
+    @property
+    def gather_bytes(self) -> int:
+        return sum(s.gather_bytes for s in self.stages)
+
+    @property
+    def exposed_bytes(self) -> int:
+        return sum(s.exposed_bytes for s in self.stages)
+
+    def describe(self) -> list[str]:
+        lines = [
+            f"pipelined: {len(self.stages)} stage(s) over {len(self.order)} "
+            f"bucket(s); exposed {self.exposed_bytes} of {self.gather_bytes} "
+            f"gathered B"
+        ]
+        for s in self.stages:
+            parts = []
+            if s.gathers:
+                parts.append(f"gather {len(s.gathers)} leaf/leaves "
+                             f"({s.gather_bytes} B)")
+            if s.compute is not None:
+                ns = f"ns op{s.compute} (hides {s.overlap_bytes} B)"
+                if s.compute_comm_bytes:
+                    ns += f" +comm {s.compute_comm_bytes} B"
+                parts.append(ns)
+            if s.writeback:
+                parts.append(f"writeback {len(s.writeback)} leaf/leaves")
+            lines.append(
+                f"  s{s.index}: " + (" | ".join(parts) if parts else "idle")
+                + (f" -> exposed {s.exposed_bytes} B" if s.gathers else "")
+            )
+        return lines
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +294,7 @@ class PhaseProgram:
     phase: str
     leaf_execs: tuple[LeafExec, ...]        # index order == muon leaf order
     ops: tuple[BucketOp, ...]
+    schedule: Optional[PipelineSchedule] = None   # engine-mode pipelined fulls
 
     def predicted_comm_bytes(self) -> int:
         """Predicted collective bytes/step (plan.py result-buffer convention)."""
@@ -230,11 +352,19 @@ class UpdateProgram:
                 comm = op.comm.kind if op.comm else (
                     "gather" if any(l.gather for l in op.leaves) else "none"
                 )
+                merged = (
+                    f" merge={'+'.join(op.kernel.merged_dtypes)}"
+                    if op.kernel.merged_dtypes else ""
+                )
                 lines.append(
                     f"  [{op.mode}] {len(op.leaves)} leaf/leaves -> "
-                    f"{op.packed_shape} {op.kernel.backend}/{op.kernel.strategy} "
-                    f"comm={comm}"
+                    f"{op.packed_shape} {op.kernel.backend}/{op.kernel.strategy}"
+                    f"{merged} comm={comm}"
                 )
+            if prog.schedule is not None:
+                lines += ["  " + l for l in prog.schedule.describe()]
+            elif name == "full":
+                lines.append("  schedule: barrier")
         return "\n".join(lines)
 
 
@@ -244,16 +374,19 @@ class UpdateProgram:
 
 
 def _layer_shard_dims(packed_shape: tuple, layer_shard: tuple) -> tuple[int, int, int]:
-    """(axis_size, stack, stack_padded) for a packed (..., m, n) stack —
-    the one place the flatten/pad-to-multiple arithmetic lives."""
+    """(axis_size, stack, stack_padded) for a packed (..., m, n) stack.
+
+    The flatten/pad arithmetic itself lives in
+    ``distributed.plan.layer_shard_dims`` (shared with pricing and the
+    engine executor); this wrapper only resolves the axis size from the
+    GSPMD ``(mesh, axis)`` tuple.
+    """
+    from repro.distributed.plan import layer_shard_dims
     from repro.sharding.specs import mesh_axis_sizes
 
     mesh, axis = layer_shard
     axis_size = mesh_axis_sizes(mesh)[axis]
-    stack = 1
-    for d in packed_shape[:-2]:
-        stack *= d
-    stack_p = -(-stack // axis_size) * axis_size
+    stack, stack_p, _, _ = layer_shard_dims(packed_shape, axis_size)
     return axis_size, stack, stack_p
 
 
@@ -287,12 +420,56 @@ def _apply_layer_shard(x: jax.Array, layer_shard: tuple):
     return x2, undo
 
 
+def execute_op(
+    op: BucketOp,
+    leaves: Sequence,
+    orth: Callable,
+    *,
+    layer_shard: Optional[tuple] = None,
+    layer_shard_apply: Optional[Callable] = None,
+) -> list[tuple[int, Any]]:
+    """Run ONE BucketOp: pack -> comm -> orthogonalize -> unpack.
+
+    ``leaves`` is indexed by flat leaf index (only this op's members are
+    read). ``layer_shard_apply(packed, op) -> (packed, undo)`` overrides the
+    GSPMD ``with_sharding_constraint`` re-shard — the shard_map engine
+    passes its explicit slice/all-gather implementation. Returns
+    ``(leaf_index, orthogonalized)`` pairs; launch-merged buckets cast to
+    ``op.compute_dtype`` before packing and back per leaf after unpacking
+    (exact: every NS kernel computes in fp32 internally).
+    """
+    parts = []
+    for le in op.leaves:
+        x = bucketing_lib.partition_leaf(leaves[le.index], le.plan)
+        if op.compute_dtype is not None and str(x.dtype) != op.compute_dtype:
+            x = x.astype(op.compute_dtype)
+        parts.append(x)
+    packed = bucketing_lib.pack_bucket(parts, op.mode)
+    undo = None
+    if op.comm is not None and op.comm.kind == "layer_shard":
+        if layer_shard_apply is not None:
+            packed, undo = layer_shard_apply(packed, op)
+        else:
+            packed, undo = _apply_layer_shard(packed, layer_shard)
+    orthed = orth(packed, strategy=op.kernel.strategy)
+    if undo is not None:
+        orthed = undo(orthed)
+    plans = [le.plan for le in op.leaves]
+    outs = []
+    for le, out in zip(op.leaves, bucketing_lib.unpack_bucket(orthed, plans, op.mode)):
+        if op.compute_dtype is not None and str(out.dtype) != le.dtype:
+            out = out.astype(le.dtype)
+        outs.append((le.index, out))
+    return outs
+
+
 def execute_ops(
     ops: Sequence[BucketOp],
     leaves: list,
     orth: Callable,
     *,
     layer_shard: Optional[tuple] = None,
+    layer_shard_apply: Optional[Callable] = None,
 ) -> list:
     """Interpret a phase's BucketOps over (possibly already-gathered) leaves.
 
@@ -302,20 +479,11 @@ def execute_ops(
     """
     results: list = [None] * len(leaves)
     for op in ops:
-        parts = [
-            bucketing_lib.partition_leaf(leaves[le.index], le.plan)
-            for le in op.leaves
-        ]
-        packed = bucketing_lib.pack_bucket(parts, op.mode)
-        undo = None
-        if op.comm is not None and op.comm.kind == "layer_shard":
-            packed, undo = _apply_layer_shard(packed, layer_shard)
-        orthed = orth(packed, strategy=op.kernel.strategy)
-        if undo is not None:
-            orthed = undo(orthed)
-        plans = [le.plan for le in op.leaves]
-        for le, out in zip(op.leaves, bucketing_lib.unpack_bucket(orthed, plans, op.mode)):
-            results[le.index] = out
+        for idx, out in execute_op(
+            op, leaves, orth,
+            layer_shard=layer_shard, layer_shard_apply=layer_shard_apply,
+        ):
+            results[idx] = out
     missing = [i for i, r in enumerate(results) if r is None]
     if missing:
         raise AssertionError(f"program left leaves {missing} unorthogonalized")
@@ -333,7 +501,12 @@ def _spec_entries(spec, ndim: int) -> list:
 
 
 def _kernel_plan(
-    packed_shape: tuple, backend: Optional[str], strategy: Optional[str]
+    packed_shape: tuple,
+    backend: Optional[str],
+    strategy: Optional[str],
+    *,
+    vmem_budget: Optional[int] = None,
+    merged_dtypes: tuple = (),
 ) -> KernelPlan:
     from repro.kernels import dispatch
 
@@ -343,8 +516,51 @@ def _kernel_plan(
             raise ValueError(
                 f"unknown NS strategy {strategy!r}; available: {dispatch.STRATEGIES}"
             )
-        return KernelPlan(backend=name, strategy=strategy)
-    return KernelPlan(backend=name, strategy=dispatch.plan_strategy(packed_shape, name))
+        return KernelPlan(backend=name, strategy=strategy, merged_dtypes=merged_dtypes)
+    return KernelPlan(
+        backend=name,
+        strategy=dispatch.plan_strategy(packed_shape, name, vmem_budget=vmem_budget),
+        merged_dtypes=merged_dtypes,
+    )
+
+
+def _group_buckets(
+    leaf_execs: Sequence[LeafExec], mode: str, bucketing: bool
+) -> list[tuple[tuple, list[LeafExec], Optional[str], tuple]]:
+    """Group leaves into buckets, sharing launches across dtypes.
+
+    Returns ``(bucket_key, members, compute_dtype, merged_dtypes)`` per
+    bucket. Concat-mode buckets with the same unit shape but different
+    dtypes merge into ONE launch (``dispatch.shared_launch_groups``):
+    ``compute_dtype`` is the promoted pack dtype and ``merged_dtypes``
+    records the merge in the compiled KernelPlan. Stack mode and the
+    degenerate per-leaf program never merge.
+    """
+    from repro.kernels import dispatch
+
+    buckets: dict = {}
+    for le in leaf_execs:
+        if not bucketing:
+            key = ("leaf", le.index)
+        elif mode == "concat":
+            key = le.plan.key[:2]  # (m, n): dtype handled by launch sharing
+        else:
+            key = le.plan.key
+        buckets.setdefault(key, []).append(le)
+
+    out = []
+    for key, members in buckets.items():
+        compute_dtype: Optional[str] = None
+        merged: tuple = ()
+        bucket_key = key
+        if bucketing and mode == "concat":
+            shared = dispatch.shared_launch_groups([m.plan.key for m in members])
+            compute_dtype, merged = shared[key]
+            bucket_key = (key[0], key[1], compute_dtype)
+            if not merged:
+                compute_dtype = None
+        out.append((bucket_key, members, compute_dtype, merged))
+    return out
 
 
 def _packed_shape(plans: Sequence[bucketing_lib.LeafPlan], mode: str) -> tuple:
@@ -390,31 +606,122 @@ def _gather_comm(
 def _layer_shard_comm(
     packed_shape: tuple, layer_shard: tuple
 ) -> tuple[Optional[CommOp], tuple]:
-    """Price the layer_shard re-shard of a packed full-step stack.
+    """Price the GSPMD layer_shard re-shard of a packed full-step stack.
 
     Returns ``(comm_op, packed_shape)`` where the shape is what the kernel
     will actually see after :func:`_apply_layer_shard` (flattened + padded
     stack) — recorded once so pricing, kernel planning, and execution cannot
     drift. Only stacks (ndim >= 3) are distributable — a single 2D matrix
-    has no layer dim to split. Predicted bytes are the per-device bytes of
-    the resharded input stack (one lead-dim re-shard; the output's implicit
-    re-replication is the partitioner's choice and is measured, not
-    predicted, by the HLO audit).
+    has no layer dim to split. Pricing is
+    ``distributed.plan.layer_shard_collectives(mode='gspmd')`` — the
+    measured model of the partitioner's lowering (two full-stack
+    all-gathers around the constraint plus a pad-masking all-reduce), which
+    replaced the old 'reshard' per-device guess that under-counted by
+    ~2x the axis size.
     """
+    from repro.distributed.plan import layer_shard_collectives
+
     if len(packed_shape) < 3:
         return None, packed_shape
     axis_size, _, stack_p = _layer_shard_dims(packed_shape, layer_shard)
     packed = (stack_p, packed_shape[-2], packed_shape[-1])
     _, axis = layer_shard
-    if axis_size <= 1:
-        return CommOp(kind="layer_shard", axes=(axis,)), packed
-    per_device = (stack_p // axis_size) * packed_shape[-2] * packed_shape[-1]
     comm = CommOp(
         kind="layer_shard",
         axes=(axis,),
-        collectives=(("reshard", (axis,), per_device * FP32_BYTES),),
+        collectives=layer_shard_collectives(
+            packed_shape, axis, axis_size, mode="gspmd"
+        ),
     )
     return comm, packed
+
+
+def _engine_layer_shard_comm(
+    packed_shape: tuple,
+    axis: str,
+    axis_size: int,
+    members: Sequence[LeafExec],
+) -> tuple[Optional[CommOp], tuple]:
+    """Price the ENGINE fold of layer_shard for one full-step bucket.
+
+    Inside the shard_map body the packed stack is replicated over ``axis``
+    (the trailing-dim gathers already ran), so each rank slices its share
+    of layers locally — free — orthogonalizes ``stack_p/axis_size`` layers,
+    and one tiled all-gather restores the full stack: exactly one priced
+    collective (``plan.layer_shard_collectives(mode='engine')``), asserted
+    exactly by the HLO audit. Buckets whose members already shard their
+    lead dims over ``axis`` (ZeRO-1) skip the op — those ranks own their
+    layers outright and the split would double-count.
+    """
+    from repro.distributed.plan import layer_shard_collectives, layer_shard_dims
+    from repro.sharding.specs import spec_entry_names
+
+    if len(packed_shape) < 3:
+        return None, packed_shape
+    for le in members:
+        for entry in _spec_entries(le.spec, len(le.plan.block_shape))[:-2]:
+            if axis in spec_entry_names(entry):
+                return None, packed_shape
+    _, stack_p, m, n = layer_shard_dims(packed_shape, axis_size)
+    local = (stack_p // max(axis_size, 1), m, n)
+    comm = CommOp(
+        kind="layer_shard",
+        axes=(axis,),
+        collectives=layer_shard_collectives(
+            packed_shape, axis, axis_size, mode="engine"
+        ),
+    )
+    return comm, local
+
+
+def _op_gather_bytes(op: BucketOp) -> int:
+    return sum(le.gather.predicted_bytes for le in op.leaves if le.gather)
+
+
+def _compile_schedule(
+    ops: Sequence[BucketOp], ns_steps: int
+) -> Optional[PipelineSchedule]:
+    """Compile the per-bucket pipeline schedule for an engine-mode phase.
+
+    Buckets execute in descending gather-bytes order (largest gathers
+    issue first; gather-free buckets run last and fill overlap bubbles).
+    Stage ``s`` issues the gathers of ``order[s]``, orthogonalizes
+    ``order[s-1]``, and writes back ``order[s-2]`` — ``len(ops) + 2``
+    stages total (a gather-only prologue and a writeback-only epilogue).
+    Per-stage pricing comes from ``distributed/plan.py``.
+    """
+    if not ops:
+        return None
+    from repro.distributed import plan as plan_lib
+
+    order = tuple(
+        sorted(range(len(ops)), key=lambda i: (-_op_gather_bytes(ops[i]), i))
+    )
+    n = len(order)
+    stages = []
+    for s in range(n + 2):
+        g_op = order[s] if s < n else None
+        c_op = order[s - 1] if 1 <= s <= n else None
+        w_op = order[s - 2] if 2 <= s <= n + 1 else None
+        stages.append(PipelineStage(
+            index=s,
+            gathers=tuple(
+                le.index for le in ops[g_op].leaves if le.gather is not None
+            ) if g_op is not None else (),
+            compute=c_op,
+            writeback=tuple(
+                le.index for le in ops[w_op].leaves
+            ) if w_op is not None else (),
+            gather_bytes=_op_gather_bytes(ops[g_op]) if g_op is not None else 0,
+            overlap_bytes=plan_lib.overlappable_ns_bytes(
+                ops[c_op].packed_shape, ns_steps
+            ) if c_op is not None else 0,
+            compute_comm_bytes=(
+                ops[c_op].comm.predicted_bytes
+                if c_op is not None and ops[c_op].comm is not None else 0
+            ),
+        ))
+    return PipelineSchedule(order=order, stages=tuple(stages))
 
 
 def _compile_phase_gspmd(
@@ -434,15 +741,12 @@ def _compile_phase_gspmd(
         plan = bucketing_lib.plan_leaf(ls.shape, ls.dtype, spec2d, mode)
         m, n = int(ls.shape[-2]), int(ls.shape[-1])
         eff = (m // ls.block.r, n // ls.block.c) if blocked else (m, n)
-        leaf_execs.append(LeafExec(index=i, plan=plan, eff_dims=eff))
-
-    buckets: dict = {}
-    for le in leaf_execs:
-        key = le.plan.key if bucketing else ("leaf", le.index)
-        buckets.setdefault(key, []).append(le)
+        leaf_execs.append(LeafExec(index=i, plan=plan, eff_dims=eff, dtype=ls.dtype))
 
     ops = []
-    for key, members in buckets.items():
+    for key, members, compute_dtype, merged in _group_buckets(
+        leaf_execs, mode, bucketing
+    ):
         plans = [le.plan for le in members]
         packed = _packed_shape(plans, mode)
         comm = None
@@ -456,9 +760,12 @@ def _compile_phase_gspmd(
                 bucket_key=key,
                 leaves=tuple(members),
                 mode=mode,
-                kernel=_kernel_plan(packed, backend, strategy),
+                kernel=_kernel_plan(
+                    packed, backend, strategy, merged_dtypes=merged
+                ),
                 comm=comm,
                 packed_shape=packed,
+                compute_dtype=compute_dtype,
             )
         )
     return PhaseProgram(phase=phase, leaf_execs=tuple(leaf_execs), ops=tuple(ops))
@@ -472,12 +779,21 @@ def _compile_phase_engine(
     backend: Optional[str],
     strategy: Optional[str],
     engine: Any,
+    layer_shard: Optional[tuple] = None,
+    full_schedule: str = "pipelined",
+    ns_steps: int = 5,
 ) -> PhaseProgram:
     """Engine mode: plan on device-local (post-gather) shapes.
 
     Inside the shard_map region every array is local, so packing is always
     ``concat`` (maximum batching) and bucket keys are local unit shapes.
+    The full phase additionally compiles its :class:`PipelineSchedule`
+    (``full_schedule='pipelined'``) — per-bucket gathers overlapped with
+    the NS of already-resident buckets — and plans pipelined kernels
+    against the reduced ``dispatch.pipeline_vmem_budget()`` so a stage's
+    fused chain never crowds out the in-flight gather's double buffers.
     """
+    from repro.kernels import dispatch
     from repro.sharding.specs import local_shape, spec_entry_size
 
     sizes = dict(engine.axis_sizes)
@@ -510,27 +826,39 @@ def _compile_phase_engine(
             eff = (m // bs.r, n // bs.c)
         plan = bucketing_lib.plan_leaf(body_shape, ls.dtype, spec2d, mode)
         leaf_execs.append(
-            LeafExec(index=i, plan=plan, eff_dims=eff, spec=spec, gather=gather)
+            LeafExec(index=i, plan=plan, eff_dims=eff, dtype=ls.dtype,
+                     spec=spec, gather=gather)
         )
 
-    buckets: dict = {}
-    for le in leaf_execs:
-        key = le.plan.key if bucketing else ("leaf", le.index)
-        buckets.setdefault(key, []).append(le)
-
-    ops = tuple(
-        BucketOp(
+    pipelined = phase == "full" and full_schedule == "pipelined"
+    vmem_budget = dispatch.pipeline_vmem_budget() if pipelined else None
+    ops = []
+    for key, members, compute_dtype, merged in _group_buckets(
+        leaf_execs, mode, bucketing
+    ):
+        packed = _packed_shape([le.plan for le in members], mode)
+        comm = None
+        if layer_shard is not None and phase == "full":
+            comm, packed = _engine_layer_shard_comm(
+                packed, layer_shard[1], sizes.get(layer_shard[1], 1), members
+            )
+        ops.append(BucketOp(
             bucket_key=key,
             leaves=tuple(members),
             mode=mode,
             kernel=_kernel_plan(
-                _packed_shape([le.plan for le in members], mode), backend, strategy,
+                packed, backend, strategy,
+                vmem_budget=vmem_budget, merged_dtypes=merged,
             ),
-            packed_shape=_packed_shape([le.plan for le in members], mode),
-        )
-        for key, members in buckets.items()
+            comm=comm,
+            packed_shape=packed,
+            compute_dtype=compute_dtype,
+        ))
+    schedule = _compile_schedule(ops, ns_steps) if pipelined else None
+    return PhaseProgram(
+        phase=phase, leaf_execs=tuple(leaf_execs), ops=tuple(ops),
+        schedule=schedule,
     )
-    return PhaseProgram(phase=phase, leaf_execs=tuple(leaf_execs), ops=ops)
 
 
 def compile_program(
@@ -541,6 +869,8 @@ def compile_program(
     strategy: Optional[str] = None,
     engine: Optional[Any] = None,
     layer_shard: Optional[tuple] = None,
+    full_schedule: str = "pipelined",
+    ns_steps: int = 5,
 ) -> UpdateProgram:
     """Compile the two-phase :class:`UpdateProgram` from static leaf info.
 
@@ -556,19 +886,39 @@ def compile_program(
       engine: optional ShardMapEngine (duck-typed: needs ``axis_sizes``,
         ``spec_for`` and ``run_program``); compiles the explicit-comm
         program executed inside one shard_map region per step.
-      layer_shard: optional ``(mesh, axis)`` — attach ``layer_shard``
-        CommOps to full-step stacks (GSPMD mode only; the engine gathers by
-        hand and ignores it).
+      layer_shard: optional ``(mesh, axis)`` — split full-step stacks over
+        ``axis`` so each rank orthogonalizes only its share of layers. In
+        GSPMD mode this is a ``with_sharding_constraint`` re-shard CommOp
+        (priced by the measured partitioner model); in engine mode it is
+        the explicit fold — local layer slice + one priced all-gather
+        inside the shard_map body.
+      full_schedule: ``'pipelined'`` (default) compiles the engine-mode
+        full phase into a per-bucket :class:`PipelineSchedule` (gather
+        bucket i+1 while orthogonalizing bucket i, double-buffered);
+        ``'barrier'`` keeps the gather-all/NS-all/slice-all body as the
+        A/B. GSPMD programs have no explicit gathers to schedule and always
+        compile without one.
+      ns_steps: chain length, used only to price the schedule's overlap
+        windows (``plan.overlappable_ns_bytes``).
     """
+    if full_schedule not in FULL_SCHEDULES:
+        raise ValueError(
+            f"full_schedule must be one of {FULL_SCHEDULES}, got {full_schedule!r}"
+        )
     if engine is not None and layer_shard is not None:
-        raise ValueError("layer_shard is a GSPMD-mode option; the engine "
-                         "schedules its own communication")
+        axis = layer_shard[1]
+        if axis not in dict(engine.axis_sizes):
+            raise ValueError(
+                f"layer_shard axis {axis!r} not in engine mesh axes "
+                f"{tuple(dict(engine.axis_sizes))}"
+            )
     phases = {}
     for phase in ("block", "full"):
         if engine is not None:
             phases[phase] = _compile_phase_engine(
                 leaf_specs, phase, bucketing=bucketing, backend=backend,
-                strategy=strategy, engine=engine,
+                strategy=strategy, engine=engine, layer_shard=layer_shard,
+                full_schedule=full_schedule, ns_steps=ns_steps,
             )
         else:
             phases[phase] = _compile_phase_gspmd(

@@ -4,24 +4,41 @@ first-class ZeRO-1 state sharding, and HLO auditing. See README.md here."""
 from repro.distributed.audit import (
     AuditResult,
     assert_matches_plan,
+    assert_pipelined_matches_plan,
+    attribute_gathers_to_stages,
     audit_compiled,
     audit_fn,
     audit_optimizer,
+    parse_collective_sizes,
     parse_collectives,
 )
 from repro.distributed.engine import ShardMapEngine, make_engine
-from repro.distributed.plan import Collective, CommPlan, LeafCommPlan, plan_comm
+from repro.distributed.plan import (
+    Collective,
+    CommPlan,
+    LeafCommPlan,
+    layer_shard_collectives,
+    ns_chain_flops,
+    overlappable_ns_bytes,
+    plan_comm,
+)
 
 __all__ = [
     "assert_matches_plan",
+    "assert_pipelined_matches_plan",
+    "attribute_gathers_to_stages",
     "audit_compiled",
     "audit_fn",
     "audit_optimizer",
     "AuditResult",
     "Collective",
     "CommPlan",
+    "layer_shard_collectives",
     "LeafCommPlan",
     "make_engine",
+    "ns_chain_flops",
+    "overlappable_ns_bytes",
+    "parse_collective_sizes",
     "parse_collectives",
     "plan_comm",
     "ShardMapEngine",

@@ -82,15 +82,18 @@ DTYPE_BYTES = {
 }
 
 
-def parse_collectives(hlo_text: str) -> dict:
-    """Sum per-device result bytes of every collective op in post-SPMD HLO.
+def parse_collective_sizes(hlo_text: str) -> list[tuple[str, int]]:
+    """Per-event collective sizes: one ``(op, result_bytes)`` per HLO op.
 
-    Collectives that only move constant-derived data (see
-    :func:`_constant_derived`) are excluded — they are partitioner artifacts,
-    not part of any communication schedule worth accounting.
+    Same exclusions and byte convention as :func:`parse_collectives` (which
+    aggregates this list), but keeps the individual events so a pipelined
+    schedule's per-stage gathers can be attributed: async ``-start`` forms
+    count once with only their result buffers, and an op the collective
+    combiner merged (tuple result) is still ONE event whose bytes are the
+    whole tuple — exactly how a combined same-stage gather should read.
     """
     const = _constant_derived(hlo_text)
-    out: dict[str, dict] = {}
+    events: list[tuple[str, int]] = []
     for m in _LINE_RE.finditer(hlo_text):
         result, op, is_start, operand_str = m.group(1), m.group(2), m.group(3), m.group(4)
         operands = _OPERAND_RE.findall(operand_str)
@@ -108,6 +111,19 @@ def parse_collectives(hlo_text: str) -> dict:
                 if d:
                     elem *= int(d)
             nbytes += elem
+        events.append((op, nbytes))
+    return events
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op in post-SPMD HLO.
+
+    Collectives that only move constant-derived data (see
+    :func:`_constant_derived`) are excluded — they are partitioner artifacts,
+    not part of any communication schedule worth accounting.
+    """
+    out: dict[str, dict] = {}
+    for op, nbytes in parse_collective_sizes(hlo_text):
         rec = out.setdefault(op, {"count": 0, "bytes": 0})
         rec["count"] += 1
         rec["bytes"] += nbytes
@@ -119,6 +135,7 @@ class AuditResult:
     """Measured collective schedule of one compiled function."""
 
     collectives: dict  # op -> {"count": int, "bytes": int}
+    events: tuple = () # per-op (name, result_bytes) in HLO text order
 
     @property
     def total_bytes(self) -> int:
@@ -136,7 +153,11 @@ class AuditResult:
 
 
 def audit_compiled(compiled) -> AuditResult:
-    return AuditResult(collectives=parse_collectives(compiled.as_text()))
+    text = compiled.as_text()
+    return AuditResult(
+        collectives=parse_collectives(text),
+        events=tuple(parse_collective_sizes(text)),
+    )
 
 
 def audit_fn(fn, *abstract_args, **abstract_kwargs) -> AuditResult:
@@ -204,3 +225,108 @@ def assert_matches_plan(result: AuditResult, plan: CommPlan, phase: str, *,
             f"phase {phase!r} planned zero collectives but HLO moves "
             f"{result.total_bytes} B: {result.collectives}"
         )
+
+
+def attribute_gathers_to_stages(result: AuditResult, prog_phase,
+                                *, op: str = "all-gather") -> dict[int, int]:
+    """Attribute measured gather events to the phase's pipeline stages.
+
+    Each :class:`PipelineStage` predicts the per-leaf gather collectives it
+    issues (sizes in the shared result-buffer convention). A measured event
+    attributes to a stage when its bytes equal one predicted collective —
+    including the async ``-start`` form, which :func:`parse_collective_sizes`
+    already reduced to its result buffers — or, when XLA's collective
+    combiner merged a stage's same-shaped gathers into one tuple op, the sum
+    of several predicted collectives *of that one stage*. Cross-stage merges
+    cannot happen (the pipelined body's double-buffer gates order them) and
+    are treated as attribution failures. Returns ``{stage index: bytes}``;
+    raises AssertionError on any unattributable or missing event — a
+    duplicate per-stage gather or a monolithic all-leaf gather fails here.
+    """
+    schedule = getattr(prog_phase, "schedule", None)
+    if schedule is None:
+        raise AssertionError("phase has no pipeline schedule to attribute to")
+    # Expected gather collectives, grouped per stage: the stage's leaf
+    # gathers plus any bucket-level comm its compute op issues (the engine
+    # layer_shard fold's all-gather runs inside the compute).
+    expected: list[tuple[int, list[int]]] = []
+    for stage in schedule.stages:
+        sizes = []
+        for li in stage.gathers:
+            gather = prog_phase.leaf_execs[li].gather
+            sizes += [b for o, _, b in gather.collectives if o == op]
+        if stage.compute is not None:
+            comm = prog_phase.ops[stage.compute].comm
+            if comm is not None:
+                sizes += [b for o, _, b in comm.collectives if o == op]
+        if sizes:
+            expected.append((stage.index, sizes))
+    events = sorted(b for o, b in result.events if o == op)
+    attributed: dict[int, int] = {}
+    remaining = list(events)
+    for stage_idx, sizes in expected:
+        taken = 0
+        unmatched = []
+        for size in sorted(sizes):
+            if size in remaining:
+                remaining.remove(size)
+                taken += size
+            else:
+                unmatched.append(size)
+        if unmatched:
+            # Combiner fallback: one event may carry several of this
+            # stage's gathers as a tuple result.
+            combined = sum(unmatched)
+            if combined in remaining:
+                remaining.remove(combined)
+                taken += combined
+            else:
+                raise AssertionError(
+                    f"stage {stage_idx}: predicted gather sizes {unmatched} "
+                    f"not found in HLO events {events}"
+                )
+        attributed[stage_idx] = taken
+    if remaining:
+        raise AssertionError(
+            f"HLO {op} events {remaining} attribute to no pipeline stage "
+            f"(duplicate per-stage gathers?); schedule expects "
+            f"{[(i, s) for i, s in expected]}"
+        )
+    return attributed
+
+
+def assert_pipelined_matches_plan(result: AuditResult, prog_phase, plan: CommPlan,
+                                  *, phase: str = "full") -> dict[int, int]:
+    """The pipelined full step's gathers, audited three ways at once.
+
+    (1) total gather bytes equal ``CommPlan.predicted_bytes(phase)`` plus
+    any bucket-level program comm (the engine layer_shard fold's
+    all-gathers, priced by the program, outside the leaf-level plan) —
+    exactly; (2) the step issues *per-bucket* gathers, not one monolithic
+    gather (more than one event whenever more than one stage gathers); and
+    (3) every event attributes to exactly one stage
+    (:func:`attribute_gathers_to_stages` — no duplicated per-stage
+    gathers). Returns the per-stage attribution.
+    """
+    measured = result.bytes_of("all-gather")
+    bucket_comm = sum(
+        b
+        for bop in prog_phase.ops if bop.comm is not None
+        for o, _, b in bop.comm.collectives if o == "all-gather"
+    )
+    predicted = plan.predicted_bytes(phase) + bucket_comm
+    if measured != predicted:
+        raise AssertionError(
+            f"pipelined {phase!r} gather bytes {measured} != plan {predicted} "
+            f"(leaf {plan.predicted_bytes(phase)} + bucket {bucket_comm})"
+            f"\n  hlo: {result.collectives}"
+        )
+    attributed = attribute_gathers_to_stages(result, prog_phase)
+    gathering_stages = [i for i, b in attributed.items() if b > 0]
+    n_events = result.count_of("all-gather")
+    if len(gathering_stages) > 1 and n_events < 2:
+        raise AssertionError(
+            f"pipelined {phase!r} emitted a monolithic gather: "
+            f"{n_events} event(s) for {len(gathering_stages)} gathering stages"
+        )
+    return attributed

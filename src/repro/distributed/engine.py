@@ -19,7 +19,13 @@ which every collective is written out by hand, scheduled to match
   * **full phase** — per sharded leaf: ``lax.all_gather`` the momentum
     shards over the trailing-dim model axes (tiled), run the full NS
     redundantly on every rank, and ``dynamic_slice`` the local shard back
-    out. One gather per sharded leaf, nothing else.
+    out. One gather per sharded leaf, nothing else. By default the gathers
+    are *pipelined* (the program's compiled :class:`PipelineSchedule`):
+    bucket i+1's gathers issue while bucket i orthogonalizes and bucket
+    i−1 slices back, double-buffered with ``lax.optimization_barrier`` so
+    at most two buckets' gathered momentum is ever live. The barrier body
+    (gather everything, NS everything, slice everything) remains as the
+    ``full_schedule='barrier'`` A/B.
 
 All of those decisions are made at *compile* time: ``core/program.py``
 builds the engine-mode :class:`UpdateProgram` from this engine's momentum
@@ -125,6 +131,43 @@ class ShardMapEngine:
             return P(*(None,) * ndim)
         return P(*_entries(spec, ndim)[:ndim])
 
+    def _layer_shard_apply(self, sizes: dict[str, int]) -> Callable:
+        """Explicit in-body layer_shard: local slice -> NS share -> all-gather.
+
+        The packed stack is replicated over the layer_shard axis once the
+        trailing-dim gathers have run, so each rank's slice is free; the
+        one collective is the tiled all-gather that restores the full stack
+        after NS — exactly what ``plan.layer_shard_collectives('engine')``
+        prices.
+        """
+
+        def apply(packed: jax.Array, op: program_lib.BucketOp):
+            from repro.distributed.plan import layer_shard_dims
+
+            axis = op.comm.axes[0]
+            d = sizes.get(axis, 1)
+            lead = packed.shape[:-2]
+            stack, stack_p, m, n = layer_shard_dims(packed.shape, d)
+            x2 = packed.reshape(stack, m, n)
+            if stack_p > stack:
+                x2 = jnp.concatenate(
+                    [x2, jnp.zeros((stack_p - stack, m, n), x2.dtype)], axis=0
+                )
+            shard = stack_p // d
+            idx = jax.lax.axis_index(axis) if d > 1 else jnp.zeros((), jnp.int32)
+            x_local = jax.lax.dynamic_slice_in_dim(x2, idx * shard, shard, axis=0)
+
+            def undo(o: jax.Array) -> jax.Array:
+                if d > 1:
+                    o = jax.lax.all_gather(o, axis, axis=0, tiled=True)
+                if stack_p > stack:
+                    o = o[:stack]
+                return o.reshape(*lead, m, n)
+
+            return x_local, undo
+
+        return apply
+
     def run_program(
         self,
         prog: program_lib.PhaseProgram,
@@ -134,26 +177,73 @@ class ShardMapEngine:
         """Execute one compiled phase inside a single shard_map region.
 
         The program's leaf records carry this engine's momentum specs and
-        gather CommOps; the body gathers, interprets the BucketOps on
-        device-local data, and slices each gathered leaf's shard back out.
+        gather CommOps. With a compiled :class:`program.PipelineSchedule`
+        (full steps, ``full_schedule='pipelined'``) the body walks the
+        stages — issue bucket i+1's gathers, orthogonalize bucket i, slice
+        bucket i−1 back to shard layout — double-buffered: a stage's
+        gathers are gated on the NS output from two stages back with
+        ``lax.optimization_barrier`` (identity on values), so at most two
+        buckets' gathered momentum is live and the compiler cannot hoist
+        every gather to the top. Without a schedule the body is the
+        barrier reference: gather all, interpret all BucketOps, slice all.
         """
         if not u_leaves:
             return []
         sizes = self.axis_sizes
         leaf_execs = prog.leaf_execs
         specs = tuple(le.spec for le in leaf_execs)
+        ls_apply = self._layer_shard_apply(sizes)
 
-        def body(*xs):
+        def barrier_body(*xs):
             ins = [
                 _gather_trailing(x, le.spec, sizes) if le.gather is not None else x
                 for x, le in zip(xs, leaf_execs)
             ]
-            outs = program_lib.execute_ops(prog.ops, ins, orth)
+            outs = program_lib.execute_ops(
+                prog.ops, ins, orth, layer_shard_apply=ls_apply
+            )
             return tuple(
                 _slice_trailing(o, le.spec, sizes) if le.gather is not None else o
                 for o, le in zip(outs, leaf_execs)
             )
 
+        def pipelined_body(*xs):
+            results: list = [None] * len(xs)
+            pending: dict = {}   # leaf index -> NS output awaiting writeback
+            gathered: dict = {}  # leaf index -> gathered (global-trailing) input
+            gate = None          # NS output from the previous stage's compute
+            for stage in prog.schedule.stages:
+                for li in stage.gathers:
+                    x = xs[li]
+                    if gate is not None:
+                        # Double-buffer gate: this gather may not issue
+                        # before the NS two computes back has retired.
+                        x, _ = jax.lax.optimization_barrier((x, gate))
+                    gathered[li] = _gather_trailing(x, leaf_execs[li].spec, sizes)
+                if stage.compute is not None:
+                    op = prog.ops[stage.compute]
+                    ins = list(xs)
+                    for le in op.leaves:
+                        if le.index in gathered:
+                            ins[le.index] = gathered.pop(le.index)
+                    for idx, out in program_lib.execute_op(
+                        op, ins, orth, layer_shard_apply=ls_apply
+                    ):
+                        pending[idx] = out
+                        gate = out
+                for li in stage.writeback:
+                    o = pending.pop(li)
+                    le = leaf_execs[li]
+                    results[li] = (
+                        _slice_trailing(o, le.spec, sizes)
+                        if le.gather is not None else o
+                    )
+            assert not pending and all(r is not None for r in results), (
+                "pipeline schedule left leaves unwritten"
+            )
+            return tuple(results)
+
+        body = barrier_body if prog.schedule is None else pipelined_body
         fn = shard_map(
             body,
             mesh=self.mesh,

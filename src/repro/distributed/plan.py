@@ -55,6 +55,15 @@ from repro.sharding.specs import spec_entry_size as _factor
 PHASES = ("block", "full", "apply")
 FP32_BYTES = 4
 
+# Modeled hardware ratios for pipeline-schedule pricing (program.py's
+# PipelineSchedule). ICI bandwidth matches benchmarks/comm_volume.py's
+# throughput model; the FLOP rate is one TPU core's MXU order of magnitude.
+# Both are *modeling* constants — the schedule's exposed-bytes prediction is
+# a planning artifact, not a measurement (the HLO audit measures bytes, the
+# benchmarks measure time).
+MODELED_ICI_BYTES_PER_S = 50e9
+MODELED_NS_FLOPS_PER_S = 100e12
+
 
 @dataclasses.dataclass(frozen=True)
 class Collective:
@@ -224,3 +233,98 @@ def plan_comm(params: Any, pspecs: Any, mesh: Mesh, *, labels: Any = None,
         for (path, leaf), spec, label in zip(flat_p, spec_leaves, label_leaves)
     )
     return CommPlan(axis_sizes=sizes, leaves=leaves)
+
+
+# ---------------------------------------------------------------------------
+# Schedule + bucket-comm pricing (used by core/program.py's compiler)
+# ---------------------------------------------------------------------------
+
+
+def ns_chain_flops(packed_shape, ns_steps: int) -> int:
+    """Modeled MXU FLOPs of one batched K-step Newton-Schulz chain.
+
+    Per iteration on an (m, n) matrix with s = min(m, n) (the kernels
+    transpose to iterate on the small side): the Gram matrix ``A = X X^T``
+    is 2 s^2 n, ``A^2`` is 2 s^3, and the update ``aX + P X`` is 2 s^2 n —
+    so ~``4 s^2 n + 2 s^3`` FLOPs per unit per iteration, times the stack
+    size and the chain length.
+    """
+    if len(packed_shape) < 2:
+        return 0
+    m, n = int(packed_shape[-2]), int(packed_shape[-1])
+    s, n = min(m, n), max(m, n)
+    stack = 1
+    for d in packed_shape[:-2]:
+        stack *= int(d)
+    return int(stack * ns_steps * (4 * s * s * n + 2 * s ** 3))
+
+
+def overlappable_ns_bytes(packed_shape, ns_steps: int) -> int:
+    """Collective bytes one bucket's NS chain can hide, in the modeled ratio.
+
+    ``time_ns = flops / MODELED_NS_FLOPS_PER_S`` of compute runs while a
+    pipelined gather is in flight; at ``MODELED_ICI_BYTES_PER_S`` that hides
+    ``time_ns * ICI`` bytes. The program's :class:`PipelineStage` exposed
+    bytes are ``max(0, gather_bytes - overlappable_ns_bytes(compute op))``.
+    """
+    flops = ns_chain_flops(packed_shape, ns_steps)
+    return int(flops / MODELED_NS_FLOPS_PER_S * MODELED_ICI_BYTES_PER_S)
+
+
+def layer_shard_dims(packed_shape, axis_size: int) -> tuple[int, int, int, int]:
+    """``(stack, stack_padded, m, n)`` of a layer-sharded packed stack.
+
+    THE single source of the flatten + ceil-pad arithmetic — pricing
+    (:func:`layer_shard_collectives`), program compilation
+    (``core/program.py``), and both executors (GSPMD re-shard and the
+    engine's in-body fold) all derive the padded stack from here, so
+    predicted and executed bytes cannot desynchronize.
+    """
+    m, n = int(packed_shape[-2]), int(packed_shape[-1])
+    stack = 1
+    for d in packed_shape[:-2]:
+        stack *= int(d)
+    axis_size = max(int(axis_size), 1)
+    stack_p = -(-stack // axis_size) * axis_size
+    return stack, stack_p, m, n
+
+
+def layer_shard_collectives(
+    packed_shape, axis: str, axis_size: int, *, mode: str
+) -> tuple:
+    """Price the layer_shard split of a packed (..., m, n) full-step stack.
+
+    Returns ``(op, axes, per_device_result_bytes)`` tuples in the program's
+    CommOp convention. Two execution modes, two very different prices:
+
+      * ``mode='engine'`` — the shard_map engine's explicit fold: each rank
+        slices its share of layers locally (free: the stack is replicated in
+        the body after the trailing-dim gathers), orthogonalizes it, and one
+        tiled ``all_gather`` over ``axis`` restores the full stack. Exactly
+        one collective whose result is the padded stack — priced exactly,
+        asserted exactly by the HLO audit.
+      * ``mode='gspmd'`` — a *model* of what the partitioner actually emits
+        for the ``with_sharding_constraint`` re-shard (measured on the
+        8-device host mesh; the old 'reshard' pricing under-counted by
+        ~2 * axis_size): one all-gather of the full padded stack on each
+        side of the constraint (un-shard the input the partitioner chose to
+        keep distributed, re-replicate the output), plus — only when the
+        stack pads to a multiple of the axis — one all-reduce whose tuple
+        result carries the padded and unpadded stacks
+        (``(stack_p + stack) * m * n`` elements): GSPMD masks the pad rows
+        by zeroing and summing instead of slicing.
+    """
+    if len(packed_shape) < 3 or axis_size <= 1:
+        return ()
+    stack, stack_p, m, n = layer_shard_dims(packed_shape, axis_size)
+    full = stack_p * m * n * FP32_BYTES
+    if mode == "engine":
+        return (("all-gather", (axis,), full),)
+    if mode == "gspmd":
+        out = [("all-gather", (axis,), full), ("all-gather", (axis,), full)]
+        if stack_p > stack:
+            out.append(
+                ("all-reduce", (axis,), (stack_p + stack) * m * n * FP32_BYTES)
+            )
+        return tuple(out)
+    raise ValueError(f"mode must be 'engine' or 'gspmd', got {mode!r}")

@@ -32,6 +32,7 @@ so switching retriggers jit specialization as expected.
 from __future__ import annotations
 
 import contextlib
+import functools
 import os
 from typing import Callable, Optional
 
@@ -42,6 +43,15 @@ STRATEGY_ENV_VAR = "REPRO_NS_STRATEGY"
 
 # Kernel strategies within a backend. "auto" defers to plan_strategy.
 STRATEGIES = ("auto", "jnp", "fused_chain", "fused_iter", "tiled")
+
+# VMEM headroom a *pipelined* stage reserves before choosing fused_chain:
+# while bucket i orthogonalizes, bucket i+1's gather is in flight and the
+# async collective's landing/streaming buffers double-buffer through VMEM.
+# A stage that would fill the whole budget with its own working set would
+# stall the overlap the schedule exists to create, so pipelined kernel
+# planning runs against ``pipeline_vmem_budget()`` instead of the full
+# budget (see core/program.py's compiler).
+PIPELINE_VMEM_RESERVE_BYTES = 2 * 2 ** 20
 
 _REGISTRY: dict[str, Callable] = {}
 _override: Optional[str] = None
@@ -87,7 +97,14 @@ def use_backend(name: str):
         set_backend(prev)
 
 
-def plan_strategy(shape, backend: str) -> str:
+def pipeline_vmem_budget() -> int:
+    """VMEM budget for kernel planning inside a pipelined full-step stage."""
+    from repro.kernels.newton_schulz import fused
+
+    return fused.VMEM_BUDGET_BYTES - PIPELINE_VMEM_RESERVE_BYTES
+
+
+def plan_strategy(shape, backend: str, *, vmem_budget: Optional[int] = None) -> str:
     """Static kernel plan for a (stacked) matrix shape under a backend.
 
     This is the compile-time decision the UpdateProgram records per bucket:
@@ -97,7 +114,11 @@ def plan_strategy(shape, backend: str) -> str:
       * oversized         -> ``"tiled"`` (3-launch HBM streaming; batched
                              stacks loop the 2D path per matrix)
 
-    ``REPRO_NS_STRATEGY`` overrides the shape-derived choice for A/Bs.
+    ``vmem_budget`` overrides the fused kernel's default working-set budget
+    — pipelined stages plan against :func:`pipeline_vmem_budget` so a stage
+    never picks a fused_chain that would crowd out the in-flight gather's
+    double buffers. ``REPRO_NS_STRATEGY`` overrides the shape-derived
+    choice for A/Bs.
     """
     env = os.environ.get(STRATEGY_ENV_VAR)
     if env and env != "auto":
@@ -110,9 +131,39 @@ def plan_strategy(shape, backend: str) -> str:
         return "jnp"
     from repro.kernels.newton_schulz import fused
 
-    if fused.fits_vmem(shape):
+    budget = vmem_budget if vmem_budget is not None else fused.VMEM_BUDGET_BYTES
+    if fused.fits_vmem(shape, budget=budget):
         return "fused_chain"
     return "tiled"
+
+
+def shared_launch_groups(keys) -> dict:
+    """Plan cross-bucket launch sharing over concat-mode bucket keys.
+
+    ``keys`` are ``(m, n, dtype)`` bucket keys. Buckets that differ only in
+    dtype share one batched launch: members are cast to the promoted compute
+    dtype on pack, the NS chain runs once over the fatter stack, and a cast
+    epilogue restores each member's dtype on unpack (exact — every NS kernel
+    computes in fp32 internally, so casting up-front reproduces the
+    separate-launch numerics bit-for-bit). Returns
+    ``{(m, n): (compute_dtype, (dtype, ...))}`` per shared group; groups
+    with a single dtype map to ``(dtype, ())`` — no epilogue.
+    """
+    import jax.numpy as jnp
+
+    by_shape: dict = {}
+    for m, n, dt in keys:
+        by_shape.setdefault((m, n), set()).add(dt)
+    out = {}
+    for shape_key, dtypes in by_shape.items():
+        if len(dtypes) == 1:
+            out[shape_key] = (next(iter(dtypes)), ())
+        else:
+            compute = str(
+                functools.reduce(jnp.promote_types, sorted(dtypes))
+            )
+            out[shape_key] = (compute, tuple(sorted(dtypes)))
+    return out
 
 
 def orthogonalize(

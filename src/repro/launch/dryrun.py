@@ -121,14 +121,14 @@ def abstract_cache(cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16
 
 
 def make_optimizer(cfg: ModelConfig, mesh, a_params, pspecs, period=5,
-                   layer_shard=None, comm=None):
+                   layer_shard=None, comm=None, full_schedule=None):
     labels = label_tree(a_params)
     bspecs = sh.block_specs_for(a_params, pspecs, mesh)
     # Only pass block specs for muon-managed leaves (BlockSpec pytree must
     # match the masked tree; mask non-muon leaves to BlockSpec(1,1)).
     opt_muon = muon(1e-3, 1e-3, period=period, block_specs=jax.tree.map(
         lambda l, b: b if l == "muon" else None, labels, bspecs),
-        layer_shard=layer_shard, comm=comm)
+        layer_shard=layer_shard, comm=comm, full_schedule=full_schedule)
     return combine({"muon": opt_muon, "adamw": adamw(3e-4)}, labels)
 
 
@@ -141,13 +141,17 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
 
     ``variant`` holds beyond-paper optimization knobs for the Perf loop:
       distribute_full: bool — layer_shard program CommOp over 'data' for
-                              full-step stacks (GSPMD mode only)
+                              full-step stacks (explicit slice/all-gather
+                              fold on the shard_map engine; GSPMD re-shard
+                              with --engine gspmd)
       accum_steps: int      — gradient-accumulation microbatching
       ring_cache: bool      — window-sized ring KV cache for SWA decode
       engine: str           — optimizer comm engine; 'shard_map' (the
                               default, repro.distributed) or 'gspmd' for
                               the implicit-partitioner A/B
       zero1: bool           — first-class ZeRO-1 momentum sharding
+      full_schedule: str    — engine full-step schedule ('pipelined'
+                              default / 'barrier' A/B)
     """
     v = variant or {}
     if v.get("flash_block_k"):
@@ -157,15 +161,16 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
         zero1 = bool(v.get("zero1"))
         dist = (mesh, "data") if v.get("distribute_full") else None
         # The explicit shard_map engine is the default distributed path
-        # (ROADMAP: its schedule matches CommPlan exactly; GSPMD drifts).
-        # layer_shard is a GSPMD-program option, so it implies gspmd mode.
-        engine_name = v.get("engine", "gspmd" if dist else "shard_map")
+        # (ROADMAP: its schedule matches CommPlan exactly; GSPMD drifts) —
+        # including for layer_shard, which the engine folds in explicitly.
+        engine_name = v.get("engine", "shard_map")
         comm = (
             make_engine(a_params, pspecs, mesh, zero1=zero1)
             if engine_name == "shard_map" else None
         )
         optimizer = make_optimizer(cfg, mesh, a_params, pspecs, period=period,
-                                   layer_shard=dist, comm=comm)
+                                   layer_shard=dist, comm=comm,
+                                   full_schedule=v.get("full_schedule"))
         a_opt = jax.eval_shape(optimizer.init, a_params)
         a_opt = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a_opt)
         # momentum trees: reuse param shardings by structure-matching paths
@@ -328,23 +333,32 @@ def _attach_opt_shardings(a_opt, a_params, mesh, zero1: bool = False):
 # CLI
 # ---------------------------------------------------------------------------
 
-def result_path(arch, shape, multi_pod, phase):
+def result_path(arch, shape, multi_pod, phase, variant=None):
     mesh = "2x16x16" if multi_pod else "16x16"
     name = f"{arch}__{shape}__{mesh}"
     if phase:
         name += f"__{phase}"
+    # Non-default variants get their own artifact: a --full-schedule barrier
+    # A/B must neither be skipped as the existing pipelined record nor
+    # clobber it.
+    for k in sorted(variant or {}):
+        v = variant[k]
+        name += f"__{k}" if v is True else f"__{k}-{v}"
     return os.path.join(RESULTS_DIR, name + ".json")
 
 
-def run_and_save(arch, shape, multi_pod, phase, skip_existing=True):
-    path = result_path(arch, shape, multi_pod, phase if get_shape(shape).kind == "train" else None)
+def run_and_save(arch, shape, multi_pod, phase, skip_existing=True, variant=None):
+    path = result_path(arch, shape, multi_pod,
+                       phase if get_shape(shape).kind == "train" else None,
+                       variant=variant)
     if skip_existing and os.path.exists(path):
         print(f"[skip existing] {path}")
         return
     label = f"{arch} x {shape} x {'2x16x16' if multi_pod else '16x16'}" + (f" x {phase}" if phase else "")
     print(f"[dryrun] {label} ...", flush=True)
     try:
-        rec = lower_combo(arch, shape, multi_pod=multi_pod, phase=phase or "block")
+        rec = lower_combo(arch, shape, multi_pod=multi_pod, phase=phase or "block",
+                          variant=variant)
     except Exception:
         rec = {"arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16",
                "phase": phase, "error": traceback.format_exc()}
@@ -364,9 +378,14 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--phase", default=None, choices=[None, "block", "full"])
+    ap.add_argument("--full-schedule", default=None,
+                    choices=["pipelined", "barrier"],
+                    help="engine full-step schedule (default pipelined; "
+                         "'barrier' lowers the gather-all/NS-all/slice-all A/B)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true", help="re-run existing results")
     args = ap.parse_args()
+    variant = {"full_schedule": args.full_schedule} if args.full_schedule else None
 
     combos = []
     if args.all:
@@ -382,7 +401,8 @@ def main():
         combos = [(args.arch, args.shape, args.multi_pod, p) for p in phases]
 
     for arch, shape, mp, phase in combos:
-        run_and_save(arch, shape, mp, phase, skip_existing=not args.force)
+        run_and_save(arch, shape, mp, phase, skip_existing=not args.force,
+                     variant=variant)
 
 
 if __name__ == "__main__":

@@ -39,8 +39,11 @@ def main():
                     choices=["shard_map", "gspmd"],
                     help="optimizer comm engine (default: the explicit "
                          "shard_map engine, distributed.engine; 'gspmd' keeps "
-                         "the implicit partitioner path for A/Bs; "
-                         "--distribute-full implies gspmd)")
+                         "the implicit partitioner path for A/Bs)")
+    ap.add_argument("--full-schedule", default=None,
+                    choices=["pipelined", "barrier"],
+                    help="engine full-step schedule (default pipelined; "
+                         "'barrier' is the gather-all/NS-all/slice-all A/B)")
     ap.add_argument("--bf16-grads", action="store_true")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -52,16 +55,15 @@ def main():
 
     from repro.launch.dryrun import lower_combo
 
-    # layer_shard (--distribute-full) is a GSPMD-program CommOp; the
-    # shard_map engine owns its own gather schedule, so the two are
-    # mutually exclusive — reject the explicit conflict rather than
-    # silently measuring the wrong engine.
-    if args.distribute_full and args.engine == "shard_map":
-        ap.error("--distribute-full requires the gspmd engine "
-                 "(layer_shard and the shard_map engine are mutually exclusive)")
-    engine = args.engine or ("gspmd" if args.distribute_full else "shard_map")
+    # --distribute-full (the layer_shard program CommOp) runs on either
+    # engine: as the explicit slice/all-gather fold inside the shard_map
+    # body (default, exactly priced), or as the GSPMD re-shard with
+    # --engine gspmd (priced by the measured partitioner model).
+    engine = args.engine or "shard_map"
 
     variant = {"engine": engine}
+    if args.full_schedule:
+        variant["full_schedule"] = args.full_schedule
     if args.distribute_full:
         variant["distribute_full"] = True
     if args.accum_steps > 1:

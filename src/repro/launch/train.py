@@ -45,7 +45,8 @@ def build_optimizer(name, params, *, lr, adam_lr, period, schedule_fn=None,
     adam_s = schedule_fn(adam_lr) if schedule_fn else adam_lr
     engine = engine if engine is not None else NSEngineConfig.from_env()
     ns_kw = dict(bucketing=engine.bucketing, ns_backend=engine.backend,
-                 ns_strategy=engine.strategy, comm=comm)
+                 ns_strategy=engine.strategy, comm=comm,
+                 full_schedule=engine.full_schedule)
     if name == "adamw":
         return combine({"adamw": adamw(adam_s, weight_decay=weight_decay)},
                        jax.tree.map(lambda _: "adamw", labels)), None
@@ -93,6 +94,13 @@ def main():
                     help="optimizer comm engine (default: the explicit "
                          "shard_map engine, repro.distributed; 'gspmd' keeps "
                          "the implicit partitioner path for A/Bs)")
+    ap.add_argument("--full-schedule", default=None,
+                    choices=["pipelined", "barrier"],
+                    help="engine-mode full-step schedule (default: pipelined "
+                         "— per-bucket gathers overlapped with NS of "
+                         "already-resident buckets; 'barrier' keeps the "
+                         "gather-all/NS-all/slice-all A/B; GSPMD always "
+                         "runs barrier-style)")
     ap.add_argument("--zero1", action="store_true",
                     help="shard optimizer state over the data axis (ZeRO-1)")
     ap.add_argument("--seed", type=int, default=0)
@@ -127,6 +135,8 @@ def main():
         engine = dataclasses.replace(engine, strategy=args.ns_strategy)
     if args.no_ns_bucketing:
         engine = dataclasses.replace(engine, bucketing=False)
+    if args.full_schedule:
+        engine = dataclasses.replace(engine, full_schedule=args.full_schedule)
     from repro.distributed import make_engine
     from repro.distributed import zero1 as zero1_lib
 

@@ -179,3 +179,96 @@ def test_plan_leaf_counts_match_params(granite):
     assert len(plan.leaves) == len(jax.tree.leaves(a_params))
     with pytest.raises(ValueError):
         plan.predicted_bytes("decode")
+
+
+# --------------------------------------------- layer_shard pricing (PR 4)
+
+def test_layer_shard_pricing_models_gspmd_substitution():
+    """ROADMAP drift fix: GSPMD lowers the layer_shard re-shard as two
+    full-stack all-gathers around the constraint plus a pad-masking
+    all-reduce — not the single per-device-share 'reshard' the old pricing
+    guessed (which under-counted by ~2x the axis size). The model here was
+    fit to (and reproduces byte-exactly) the measured 8-device HLO."""
+    from repro.distributed.plan import FP32_BYTES, layer_shard_collectives
+
+    # divisible stack: no pad, no all-reduce
+    colls = layer_shard_collectives((8, 64, 128), "data", 8, mode="gspmd")
+    full = 8 * 64 * 128 * FP32_BYTES
+    assert colls == (("all-gather", ("data",), full),
+                     ("all-gather", ("data",), full))
+    # padded stack (6 -> 8 layers): + the (padded+unpadded) all-reduce
+    colls = layer_shard_collectives((6, 32, 96), "data", 8, mode="gspmd")
+    full_p = 8 * 32 * 96 * FP32_BYTES
+    assert colls[:2] == (("all-gather", ("data",), full_p),
+                         ("all-gather", ("data",), full_p))
+    assert colls[2] == ("all-reduce", ("data",), (8 + 6) * 32 * 96 * FP32_BYTES)
+    # degenerate cases price zero
+    assert layer_shard_collectives((8, 64, 128), "data", 1, mode="gspmd") == ()
+    assert layer_shard_collectives((64, 128), "data", 8, mode="gspmd") == ()
+    with pytest.raises(ValueError, match="mode"):
+        layer_shard_collectives((8, 64, 128), "data", 8, mode="implicit")
+
+
+def test_layer_shard_engine_pricing_is_one_gather():
+    """The engine fold's price: slicing the replicated stack is local,
+    the single collective is the all-gather restoring the padded stack."""
+    from repro.distributed.plan import FP32_BYTES, layer_shard_collectives
+
+    colls = layer_shard_collectives((6, 32, 96), "data", 4, mode="engine")
+    assert colls == (("all-gather", ("data",), 8 * 32 * 96 * FP32_BYTES),)
+
+
+def test_layer_shard_program_reconciles_with_plan():
+    """Program CommOps and plan.layer_shard_collectives are one pricing:
+    the GSPMD program op carries exactly the modeled substitution, and the
+    engine program op exactly the single fold gather — asserted here so the
+    two views cannot drift again."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import LeafSpec, compile_program
+    from repro.distributed.plan import layer_shard_collectives
+
+    mesh4 = fake_mesh((4,), ("data",))
+    stack = LeafSpec(key=("w",), shape=(6, 32, 96), dtype="float32", block=None)
+
+    prog = compile_program((stack,), backend="jnp", layer_shard=(mesh4, "data"))
+    (op,) = prog.phase("full").ops
+    assert op.comm.kind == "layer_shard"
+    assert op.comm.collectives == layer_shard_collectives(
+        (6, 32, 96), "data", 4, mode="gspmd")
+    # recorded packed shape is the padded global stack the kernel sees
+    assert op.packed_shape == (8, 32, 96)
+
+    class FakeEngine:
+        axis_sizes = {"data": 4}
+
+        def spec_for(self, key, ndim):
+            return P(*(None,) * ndim)
+
+    prog_e = compile_program((stack,), backend="jnp", engine=FakeEngine(),
+                             layer_shard=(object(), "data"))
+    (op_e,) = prog_e.phase("full").ops
+    assert op_e.comm.collectives == layer_shard_collectives(
+        (6, 32, 96), "data", 4, mode="engine")
+    assert op_e.packed_shape == (2, 32, 96)  # per-rank share
+
+
+def test_schedule_pricing_helpers():
+    """ns_chain_flops / overlappable_ns_bytes: the PipelineStage exposure
+    model — monotone in stack, steps, and size, small-side driven."""
+    from repro.distributed.plan import (
+        MODELED_ICI_BYTES_PER_S,
+        MODELED_NS_FLOPS_PER_S,
+        ns_chain_flops,
+        overlappable_ns_bytes,
+    )
+
+    f1 = ns_chain_flops((64, 128), 5)
+    assert f1 == 5 * (4 * 64 * 64 * 128 + 2 * 64 ** 3)
+    assert ns_chain_flops((128, 64), 5) == f1          # transpose-invariant
+    assert ns_chain_flops((3, 64, 128), 5) == 3 * f1   # linear in stack
+    assert ns_chain_flops((64, 128), 10) == 2 * f1     # linear in steps
+    assert ns_chain_flops((), 5) == 0
+    b = overlappable_ns_bytes((64, 128), 5)
+    assert b == int(f1 / MODELED_NS_FLOPS_PER_S * MODELED_ICI_BYTES_PER_S)
+    assert overlappable_ns_bytes((8, 64, 128), 5) > b

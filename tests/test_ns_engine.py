@@ -146,6 +146,50 @@ def test_plan_strategy_decides_per_shape(monkeypatch):
         dispatch.plan_strategy((4, 64, 128), "pallas")
 
 
+# (128, n): fused working set = 1024*n_p + 128 KiB — chosen to fit the full
+# 12 MiB budget but NOT the pipeline-reserved one (10 MiB).
+_EDGE_SHAPE = (128, 11008)
+
+
+def test_plan_strategy_pipeline_vmem_budget(monkeypatch):
+    """A pipelined stage plans against the reduced VMEM budget: a shape
+    that fused-chains under the full budget falls back to tiled when the
+    in-flight gather's double buffers are reserved."""
+    monkeypatch.delenv(dispatch.STRATEGY_ENV_VAR, raising=False)
+    assert fused.fits_vmem(_EDGE_SHAPE)
+    assert not fused.fits_vmem(_EDGE_SHAPE, budget=dispatch.pipeline_vmem_budget())
+    assert dispatch.plan_strategy(_EDGE_SHAPE, "pallas") == "fused_chain"
+    assert dispatch.plan_strategy(
+        _EDGE_SHAPE, "pallas", vmem_budget=dispatch.pipeline_vmem_budget()
+    ) == "tiled"
+
+
+def test_pipelined_program_respects_vmem_reserve(monkeypatch):
+    """End-to-end: the engine-mode pipelined full phase plans the edge
+    shape as tiled while the barrier program keeps the fused chain."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import LeafSpec, compile_program
+
+    monkeypatch.delenv(dispatch.STRATEGY_ENV_VAR, raising=False)
+
+    class FakeEngine:
+        axis_sizes = {"model": 4}
+
+        def spec_for(self, key, ndim):
+            return P(*([None] * (ndim - 1) + ["model"]))
+
+    spec = LeafSpec(key=("w",), shape=_EDGE_SHAPE, dtype="float32", block=None)
+    pipelined = compile_program((spec,), backend="pallas", engine=FakeEngine(),
+                                full_schedule="pipelined")
+    barrier = compile_program((spec,), backend="pallas", engine=FakeEngine(),
+                              full_schedule="barrier")
+    assert pipelined.phase("full").ops[0].kernel.strategy == "tiled"
+    assert barrier.phase("full").ops[0].kernel.strategy == "fused_chain"
+    # the reserve is a full-phase concern; block steps keep the full budget
+    assert pipelined.phase("block").ops[0].kernel.strategy == "fused_chain"
+
+
 # ------------------------------------------------------------------- bucketing
 
 def test_plan_buckets_groups_by_unit_shape():
@@ -294,6 +338,89 @@ def test_ns_dispatch_count_equals_bucket_count(phase, monkeypatch):
     n_muon_leaves = len(leaves)
     assert len(calls) == expected
     assert expected < n_muon_leaves  # bucketing actually coalesced dispatches
+
+
+# ------------------------------------------------- cross-bucket launch sharing
+
+def test_shared_launch_groups_merges_dtypes():
+    groups = dispatch.shared_launch_groups([
+        (16, 32, "float32"), (16, 32, "bfloat16"), (64, 64, "float32"),
+    ])
+    assert groups[(16, 32)] == ("float32", ("bfloat16", "float32"))
+    assert groups[(64, 64)] == ("float32", ())  # single dtype: no epilogue
+
+
+def test_cross_bucket_launch_sharing_in_program():
+    """Buckets with the same unit shape but different dtypes share ONE
+    launch with a cast epilogue (ROADMAP item): the merge is recorded in
+    the compiled KernelPlan and the numerics match per-dtype launches
+    exactly (every NS kernel computes in fp32 internally)."""
+    from repro.core import LeafSpec, compile_program
+    from repro.core.program import execute_ops
+
+    specs = (
+        LeafSpec(key=("a",), shape=(16, 32), dtype="float32", block=None),
+        LeafSpec(key=("b",), shape=(3, 16, 32), dtype="bfloat16", block=None),
+        LeafSpec(key=("c",), shape=(16, 16), dtype="float32", block=None),
+    )
+    prog = compile_program(specs, backend="jnp")
+    full = prog.phase("full")
+    assert len(full.ops) == 2  # (16,32) f32+bf16 merged; (16,16) alone
+    merged = next(op for op in full.ops if len(op.leaves) == 2)
+    assert merged.compute_dtype == "float32"
+    assert merged.kernel.merged_dtypes == ("bfloat16", "float32")
+    assert merged.packed_shape == (4, 16, 32)
+    assert "merge=bfloat16+float32" in prog.summary()
+    solo = next(op for op in full.ops if len(op.leaves) == 1)
+    assert solo.compute_dtype is None and solo.kernel.merged_dtypes == ()
+
+    # numerics: merged launch == per-dtype launches, leaf dtypes preserved
+    leaves = [
+        jax.random.normal(jax.random.PRNGKey(0), (16, 32), jnp.float32),
+        jax.random.normal(jax.random.PRNGKey(1), (3, 16, 32), jnp.bfloat16),
+        jax.random.normal(jax.random.PRNGKey(2), (16, 16), jnp.float32),
+    ]
+    calls = []
+
+    def orth(x, strategy=None):
+        calls.append(x.shape)
+        return orthogonalize_jnp(x, steps=5)
+
+    outs = execute_ops(full.ops, leaves, orth)
+    assert len(calls) == 2  # one launch for the merged bucket
+    for leaf, out in zip(leaves, outs):
+        assert out.dtype == leaf.dtype and out.shape == leaf.shape
+        expect = orthogonalize_jnp(leaf.astype(jnp.float32), steps=5)
+        atol = 1e-2 if leaf.dtype == jnp.bfloat16 else 1e-6
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(expect.astype(leaf.dtype), np.float32),
+            rtol=0, atol=atol, err_msg=str(leaf.shape),
+        )
+
+    # the degenerate per-leaf program never merges
+    prog_pl = compile_program(specs, backend="jnp", bucketing=False)
+    assert all(op.compute_dtype is None for op in prog_pl.phase("full").ops)
+    assert len(prog_pl.phase("full").ops) == 3
+
+
+def test_stack_mode_never_merges_dtypes():
+    """GSPMD block steps stack-pack to keep operand shardings intact; a
+    cross-dtype cast there would change the moved bytes, so dtypes stay in
+    their own buckets."""
+    from repro.core import LeafSpec, compile_program
+
+    specs = (
+        LeafSpec(key=("a",), shape=(16, 32), dtype="float32",
+                 block=BlockSpec2D(2, 4)),
+        LeafSpec(key=("b",), shape=(16, 32), dtype="bfloat16",
+                 block=BlockSpec2D(2, 4)),
+    )
+    prog = compile_program(specs, backend="jnp")
+    assert len(prog.phase("block").ops) == 2
+    assert all(op.compute_dtype is None for op in prog.phase("block").ops)
+    # the same two leaves merge on the (concat) full phase
+    assert len(prog.phase("full").ops) == 1
 
 
 # -------------------------------------------------------------------- dispatch
