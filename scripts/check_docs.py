@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""Docs coverage gate: every launcher CLI flag must appear in the operator guide.
+
+Scans ``add_argument`` calls in launch/train.py, launch/perf.py, and
+launch/dryrun.py (source-level regex — importing the launchers would touch
+XLA_FLAGS/device state) and fails if any long flag is missing from
+``docs/operators-guide.md``. Run by scripts/ci.sh.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LAUNCHERS = [
+    REPO / "src" / "repro" / "launch" / "train.py",
+    REPO / "src" / "repro" / "launch" / "perf.py",
+    REPO / "src" / "repro" / "launch" / "dryrun.py",
+]
+GUIDE = REPO / "docs" / "operators-guide.md"
+
+# every long option mentioned in an add_argument call (aliases included)
+_FLAG_RE = re.compile(r"add_argument\(\s*((?:\"--[\w-]+\",?\s*)+)")
+_OPT_RE = re.compile(r"\"(--[\w-]+)\"")
+
+
+def launcher_flags(path: Path) -> list[str]:
+    flags = []
+    for m in _FLAG_RE.finditer(path.read_text()):
+        flags += _OPT_RE.findall(m.group(1))
+    return flags
+
+
+def main() -> int:
+    if not GUIDE.exists():
+        print(f"missing {GUIDE}", file=sys.stderr)
+        return 1
+    guide = GUIDE.read_text()
+    missing: list[tuple[str, str]] = []
+    total = 0
+    for path in LAUNCHERS:
+        for flag in launcher_flags(path):
+            total += 1
+            if flag not in guide:
+                missing.append((path.name, flag))
+    if missing:
+        for name, flag in missing:
+            print(f"{name}: {flag} not documented in docs/operators-guide.md",
+                  file=sys.stderr)
+        return 1
+    print(f"docs check: {total} launcher flags all documented in "
+          f"docs/operators-guide.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

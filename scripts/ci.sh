@@ -59,6 +59,23 @@ echo "== pipelined-vs-barrier parity + schedule audit (8 host devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m pytest -q \
     tests/test_update_program.py -m slow
 
+echo "== multi-pod mesh + ZeRO-1 flatten fallback (16 host devices) =="
+# (2,2,2) ('pod','data','model') mesh: zero inter-pod bytes on block steps,
+# per-axis plan-exact full-step gathers, DCN-first pipeline order, and the
+# flatten fallback bitwise vs unsharded state (incl. granite's 36/16 shape).
+python -m pytest -q tests/test_multipod.py -m slow
+
+echo "== multi-pod (2,2,2) dryrun smoke (8 host devices) =="
+# Lower+compile both MuonBP phases of the reduced 960M config on the
+# hierarchical mesh end-to-end through the real launcher.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m repro.launch.dryrun \
+    --arch muonbp-960m --shape train_smoke --mesh pod=2,data=2,model=2 \
+    --reduced --no-calibrate --force
+
+echo "== docs flag coverage =="
+# Every train.py/perf.py/dryrun.py CLI flag must appear in the operator guide.
+python scripts/check_docs.py
+
 echo "== quick benchmarks (ns_cost, optimizer_step) =="
 out=$(REPRO_BENCH_ONLY=ns_cost,optimizer_step python -m benchmarks.run --quick)
 echo "$out"

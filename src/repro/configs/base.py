@@ -159,6 +159,9 @@ class InputShape:
 
 SHAPES = {
     "train_4k": InputShape("train_4k", "train", 4096, 256),
+    # CPU-compilable smoke for scripts/ci.sh's 8-device hierarchical-mesh
+    # dryrun (pair with --reduced --no-calibrate).
+    "train_smoke": InputShape("train_smoke", "train", 128, 8),
     "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
     "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
     "long_500k": InputShape("long_500k", "decode", 524288, 1),

@@ -28,7 +28,16 @@ configuration is a *program*, not a code path: ``bucketing=False`` compiles
 the degenerate one-bucket-per-leaf program, ``comm=`` (a ShardMapEngine)
 compiles the explicit-collective program executed in one shard_map region
 per step, and ``layer_shard=`` attaches the layer-partitioned full-step
-re-shard (the former ``distribute_full`` option, now a program CommOp).
+program CommOp (explicit fold on the engine, re-shard under GSPMD).
+
+ZeRO-1 flatten fallback: an engine built with ``zero1_flatten=True``
+reports lead-padded state shapes for leaves whose stack dim does not
+divide the ZeRO axes (``engine.state_shape_for``). ``init`` allocates the
+momentum padded (pad layers are zero and stay zero — ``mu*0 + 0``), and
+``update`` zero-pads the matching gradient leaves before the momentum /
+NS-input arithmetic; the compiled program's writeback returns those
+updates in the param layout, so the epilogue and ``params + updates``
+never see the pad.
 """
 
 from __future__ import annotations
@@ -200,8 +209,38 @@ def muon(
             )
         return programs[cache_key]
 
+    # ZeRO-1 flatten fallback: the engine reports lead-padded state shapes
+    # for leaves whose stack dim does not divide the ZeRO axes. None when
+    # the engine predates the fallback or no engine is attached (GSPMD
+    # programs never pad).
+    state_shape_for = getattr(comm, "state_shape_for", None)
+
+    def _state_shape(path, leaf) -> tuple:
+        if state_shape_for is None:
+            return tuple(leaf.shape)
+        return tuple(state_shape_for(_path_key(path), tuple(leaf.shape)))
+
+    def _pad_lead(x: jax.Array, lead: int, key) -> jax.Array:
+        if x.shape[0] == lead:
+            return x
+        # XLA `pad` (not concatenate) on the to-be-sharded lead dim: the
+        # partitioner lowers a sharded pad locally (iota mask per shard),
+        # where a concatenate costs a halo-merge all-reduce over the ZeRO
+        # axes — inter-pod traffic on a multi-pod mesh. The constraint pins
+        # the result to the momentum's ZeRO sharding so the downstream
+        # elementwise ops are born sharded.
+        from jax.sharding import NamedSharding
+
+        out = jnp.pad(x, [(0, lead - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+        spec = comm.spec_for(key, out.ndim)
+        return jax.lax.with_sharding_constraint(
+            out, NamedSharding(comm.mesh, spec)
+        )
+
     def init(params: PyTree) -> OptState:
-        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        zeros = jax.tree_util.tree_map_with_path(
+            lambda path, p: jnp.zeros(_state_shape(path, p), jnp.float32), params
+        )
         return OptState(momentum=zeros, count=jnp.zeros((), jnp.int32))
 
     def _orth(u: jax.Array, strategy: Optional[str] = None) -> jax.Array:
@@ -216,18 +255,23 @@ def muon(
         count = state.count + 1
         lr = lr_full_fn(count) if phase == "full" else lr_block_fn(count)
 
-        new_m = jax.tree.map(
-            lambda m, g: mu * m + g.astype(jnp.float32), state.momentum, grads
-        )
-
         # ---- prologue: flat leaves + NS inputs -------------------------
+        # Gradient leaves are zero-padded on the lead dim where the state
+        # is flatten-fallback padded, so the momentum / NS-input arithmetic
+        # is plain elementwise (pad rows stay exactly zero: mu*0 + 0).
         flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
         keys = [_path_key(path) for path, _ in flat]
-        g_leaves = [l for _, l in flat]
-        m_leaves = jax.tree.leaves(new_m)
+        old_m_leaves = jax.tree.leaves(state.momentum)
+        g_leaves = [
+            _pad_lead(g.astype(jnp.float32), m.shape[0], key) if g.ndim else
+            g.astype(jnp.float32)
+            for (key, (_, g)), m in zip(zip(keys, flat), old_m_leaves)
+        ]
+        m_leaves = [mu * m + g for m, g in zip(old_m_leaves, g_leaves)]
+        new_m = jax.tree_util.tree_unflatten(treedef, m_leaves)
         p_leaves = jax.tree.leaves(params)
         u_leaves = [
-            (g.astype(jnp.float32) + mu * m) if nesterov else m
+            (g + mu * m) if nesterov else m
             for g, m in zip(g_leaves, m_leaves)
         ]
 

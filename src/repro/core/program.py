@@ -3,9 +3,9 @@
 The paper's contribution is a *schedule* — shard-local block Newton-Schulz
 most steps, one full orthogonalization every P steps, with two stepsizes.
 Before this module that schedule was executed by four divergent paths inside
-``core/muon.py`` (per-leaf, shape-bucketed, shard_map-engine, and the legacy
-GSPMD ``distribute_full``), each re-deriving blocking / bucketing / comm
-decisions at every traced step. Here all of those decisions are made ONCE,
+``core/muon.py`` (per-leaf, shape-bucketed, shard_map-engine, and a legacy
+GSPMD layer-distributed full step), each re-deriving blocking / bucketing /
+comm decisions at every traced step. Here all of those decisions are made ONCE,
 from static information only (leaf shapes + dtypes, the logical block grid,
 the optional distributed engine's momentum PartitionSpecs, the NS kernel
 backend), and recorded as a program that ``muon.update`` merely interprets:
@@ -30,10 +30,9 @@ Per ``BucketOp`` the pipeline is:
     shardings survive and the step stays zero-collective).
   * **comm**    — an optional bucket-level :class:`CommOp`: ``layer_shard``
     re-shards the packed stack's leading dim over a mesh axis so each rank
-    orthogonalizes only its share of layers (the fold of the old
-    ``distribute_full`` GSPMD option into the program). Leaf-level ``gather``
-    CommOps (shard_map full steps) run before packing, inside the engine's
-    region. Every CommOp carries its predicted collectives in the same
+    orthogonalizes only its share of layers (``muon(layer_shard=)``).
+    Leaf-level ``gather`` CommOps (shard_map full steps) run before
+    packing, inside the engine's region. Every CommOp carries its predicted collectives in the same
     per-device result-buffer byte convention as ``distributed/plan.py``, so
     program and CommPlan price communication identically.
   * **orthogonalize** — one batched NS chain per bucket, executed by the
@@ -144,12 +143,20 @@ class CommOp:
         matching local ``dynamic_slice`` after NS is free (no collective).
       * ``'layer_shard'`` — bucket-level split of the packed stack's
         leading dim over ``axes[0]`` so full-step NS FLOPs divide by the
-        axis size (the old ``distribute_full``, folded into the program).
-        In GSPMD mode it executes as a ``with_sharding_constraint``
-        re-shard priced by the measured partitioner model
-        (``plan.layer_shard_collectives(mode='gspmd')``); in engine mode it
-        is explicit — local layer slice, NS on the share, one priced
-        all-gather inside the shard_map body (``mode='engine'``).
+        axis size (the former GSPMD-only layer-partitioned full step,
+        folded into the program). In GSPMD mode it executes as a
+        ``with_sharding_constraint`` re-shard priced by the measured
+        partitioner model (``plan.layer_shard_collectives(mode='gspmd')``);
+        in engine mode it is explicit — local layer slice, NS on the
+        share, one priced all-gather inside the shard_map body
+        (``mode='engine'``).
+      * ``'apply'``       — leaf-level writeback gather of a ZeRO-1
+        flatten-fallback leaf (lead dim padded and sharded over the ZeRO
+        axes because ``num_layers`` does not divide them): one tiled
+        all-gather per ZeRO axis restores the padded stack so the update
+        re-enters the param layout; the pad slice after is local. Priced
+        in the plan's 'apply' phase, executed at writeback inside the
+        engine body on BOTH phases.
 
     ``collectives`` are ``(op, axes, per_device_result_bytes)`` tuples in
     the exact convention of ``distributed.plan.Collective`` so
@@ -164,6 +171,11 @@ class CommOp:
     @property
     def predicted_bytes(self) -> int:
         return sum(b for _, _, b in self.collectives)
+
+    def predicted_link_bytes(self, link: str) -> int:
+        from repro.distributed.plan import link_class
+
+        return sum(b for _, axes, b in self.collectives if link_class(axes) == link)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,7 +197,14 @@ class KernelPlan:
 
 @dataclasses.dataclass(frozen=True)
 class LeafExec:
-    """Per-leaf execution record for one phase."""
+    """Per-leaf execution record for one phase.
+
+    ``apply``/``out_spec``/``lead`` are set only for ZeRO-1
+    flatten-fallback leaves: the writeback gathers the padded stack's lead
+    dim over the ZeRO axes (``apply``), slices it back to ``lead`` layers
+    (local), and the leaf leaves the shard_map region in the *param*
+    layout (``out_spec``) instead of its momentum spec.
+    """
 
     index: int                              # position in the flat muon-leaf list
     plan: bucketing_lib.LeafPlan            # pack plan on the in-body shape
@@ -193,6 +212,9 @@ class LeafExec:
     dtype: str = "float32"                  # leaf dtype (cast-epilogue target)
     spec: Optional[Any] = None              # normalized momentum PartitionSpec
     gather: Optional[CommOp] = None         # engine-mode pre-pack gather
+    apply: Optional[CommOp] = None          # flatten-fallback writeback gather
+    out_spec: Optional[Any] = None          # out layout when != spec (fallback)
+    lead: Optional[int] = None              # unpadded lead dim (fallback)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,6 +247,13 @@ class PipelineStage:
     ``compute_comm_bytes`` is bucket-level comm the compute op itself issues
     (engine layer_shard all-gathers), reported separately because it
     overlaps the NEXT stage's compute, not this one's.
+
+    Hierarchical meshes split the accounting per link class:
+    ``dcn_gather_bytes`` of ``gather_bytes`` traverse the inter-pod DCN
+    link (axes in ``plan.DCN_AXES``), and the same NS chain hides only
+    ``dcn_overlap_bytes`` of them (the DCN rate is the slower one).
+    Exposure is clamped per link and summed — on an all-ICI mesh the DCN
+    terms are zero and the pricing reduces to the flat-mesh model.
     """
 
     index: int
@@ -234,10 +263,23 @@ class PipelineStage:
     gather_bytes: int = 0
     overlap_bytes: int = 0
     compute_comm_bytes: int = 0
+    dcn_gather_bytes: int = 0
+    dcn_overlap_bytes: int = 0
+
+    @property
+    def ici_gather_bytes(self) -> int:
+        return self.gather_bytes - self.dcn_gather_bytes
 
     @property
     def exposed_bytes(self) -> int:
-        return max(0, self.gather_bytes - self.overlap_bytes)
+        return (
+            max(0, self.ici_gather_bytes - self.overlap_bytes)
+            + max(0, self.dcn_gather_bytes - self.dcn_overlap_bytes)
+        )
+
+    @property
+    def exposed_dcn_bytes(self) -> int:
+        return max(0, self.dcn_gather_bytes - self.dcn_overlap_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -264,17 +306,31 @@ class PipelineSchedule:
     def exposed_bytes(self) -> int:
         return sum(s.exposed_bytes for s in self.stages)
 
+    @property
+    def dcn_gather_bytes(self) -> int:
+        return sum(s.dcn_gather_bytes for s in self.stages)
+
+    @property
+    def exposed_dcn_bytes(self) -> int:
+        return sum(s.exposed_dcn_bytes for s in self.stages)
+
     def describe(self) -> list[str]:
+        dcn = (
+            f" (inter-pod: exposed {self.exposed_dcn_bytes} of "
+            f"{self.dcn_gather_bytes} B)"
+            if self.dcn_gather_bytes else ""
+        )
         lines = [
             f"pipelined: {len(self.stages)} stage(s) over {len(self.order)} "
             f"bucket(s); exposed {self.exposed_bytes} of {self.gather_bytes} "
-            f"gathered B"
+            f"gathered B" + dcn
         ]
         for s in self.stages:
             parts = []
             if s.gathers:
+                link = f", {s.dcn_gather_bytes} B dcn" if s.dcn_gather_bytes else ""
                 parts.append(f"gather {len(s.gathers)} leaf/leaves "
-                             f"({s.gather_bytes} B)")
+                             f"({s.gather_bytes} B{link})")
             if s.compute is not None:
                 ns = f"ns op{s.compute} (hides {s.overlap_bytes} B)"
                 if s.compute_comm_bytes:
@@ -297,12 +353,24 @@ class PhaseProgram:
     schedule: Optional[PipelineSchedule] = None   # engine-mode pipelined fulls
 
     def predicted_comm_bytes(self) -> int:
-        """Predicted collective bytes/step (plan.py result-buffer convention)."""
+        """Predicted collective bytes/step (plan.py result-buffer convention).
+
+        Phase-attributed comm only: leaf gathers plus bucket comm. The
+        flatten-fallback writeback gathers execute in this phase's body
+        but belong to the plan's 'apply' accounting —
+        :meth:`predicted_apply_bytes` reports them.
+        """
         total = sum(
             le.gather.predicted_bytes for le in self.leaf_execs if le.gather
         )
         total += sum(op.comm.predicted_bytes for op in self.ops if op.comm)
         return total
+
+    def predicted_apply_bytes(self) -> int:
+        """ZeRO-1 flatten-fallback writeback bytes (the plan's 'apply')."""
+        return sum(
+            le.apply.predicted_bytes for le in self.leaf_execs if le.apply
+        )
 
     def eff_dims(self, index: int) -> tuple[int, int]:
         return self.leaf_execs[index].eff_dims
@@ -344,9 +412,11 @@ class UpdateProgram:
         lines = []
         for name in ("block", "full"):
             prog = self.phases[name]
+            apply_b = prog.predicted_apply_bytes()
             lines.append(
                 f"{name}: {len(prog.ops)} bucket op(s), "
                 f"predicted comm {prog.predicted_comm_bytes()} B"
+                + (f" (+{apply_b} B zero1 apply)" if apply_b else "")
             )
             for op in prog.ops:
                 comm = op.comm.kind if op.comm else (
@@ -577,12 +647,15 @@ def _gather_comm(
 ) -> Optional[CommOp]:
     """Predicted tiled all-gather of the trailing dims (plan.py convention).
 
-    Mirrors ``engine._gather_trailing``: dim -2 then -1, per-device result
-    bytes growing as each dim fills in. Shard arithmetic comes from the
-    canonical ``sharding.specs`` helpers (late import: the sharding layer
-    is heavier than core and only needed at program-compile time).
+    The collective sequence is the canonical
+    ``distributed.plan.trailing_gather_collectives`` (one per mesh axis,
+    minor first, mirroring ``engine._gather_trailing`` event-for-event);
+    shard arithmetic comes from the ``sharding.specs`` helpers (late
+    import: the sharding layer is heavier than core and only needed at
+    program-compile time).
     """
-    from repro.sharding.specs import local_shape, spec_entry_names, spec_entry_size
+    from repro.distributed.plan import trailing_gather_collectives
+    from repro.sharding.specs import local_shape, spec_entry_size
 
     entries = _spec_entries(spec, len(shape))
     r = spec_entry_size(entries[-2], sizes)
@@ -592,15 +665,11 @@ def _gather_comm(
     local = 1
     for d in local_shape(spec, shape, sizes):
         local *= d
-    collectives = []
-    axes: list[str] = []
-    for factor, entry in ((r, entries[-2]), (c, entries[-1])):
-        if factor > 1:
-            local *= factor
-            names = spec_entry_names(entry)
-            axes += list(names)
-            collectives.append(("all-gather", names, local * FP32_BYTES))
-    return CommOp(kind="gather", axes=tuple(axes), collectives=tuple(collectives))
+    collectives = trailing_gather_collectives(
+        local, (entries[-2], entries[-1]), sizes
+    )
+    axes = tuple(name for _, (name,), _ in collectives)
+    return CommOp(kind="gather", axes=axes, collectives=collectives)
 
 
 def _layer_shard_comm(
@@ -678,24 +747,40 @@ def _op_gather_bytes(op: BucketOp) -> int:
     return sum(le.gather.predicted_bytes for le in op.leaves if le.gather)
 
 
+def _op_gather_link_bytes(op: BucketOp, link: str) -> int:
+    return sum(
+        le.gather.predicted_link_bytes(link) for le in op.leaves if le.gather
+    )
+
+
 def _compile_schedule(
     ops: Sequence[BucketOp], ns_steps: int
 ) -> Optional[PipelineSchedule]:
     """Compile the per-bucket pipeline schedule for an engine-mode phase.
 
-    Buckets execute in descending gather-bytes order (largest gathers
-    issue first; gather-free buckets run last and fill overlap bubbles).
-    Stage ``s`` issues the gathers of ``order[s]``, orthogonalizes
-    ``order[s-1]``, and writes back ``order[s-2]`` — ``len(ops) + 2``
-    stages total (a gather-only prologue and a writeback-only epilogue).
-    Per-stage pricing comes from ``distributed/plan.py``.
+    Buckets execute in descending gather-bytes order with the *inter-pod*
+    (DCN) bytes as the primary key — a DCN gather is the slowest to drain
+    and has the least NS time able to hide it, so it must issue first;
+    within a link class, largest gathers first and gather-free
+    (VMEM-resident) buckets last to fill overlap bubbles. Stage ``s``
+    issues the gathers of ``order[s]``, orthogonalizes ``order[s-1]``, and
+    writes back ``order[s-2]`` — ``len(ops) + 2`` stages total (a
+    gather-only prologue and a writeback-only epilogue). Per-stage pricing
+    comes from ``distributed/plan.py``, per link class.
     """
     if not ops:
         return None
     from repro.distributed import plan as plan_lib
 
     order = tuple(
-        sorted(range(len(ops)), key=lambda i: (-_op_gather_bytes(ops[i]), i))
+        sorted(
+            range(len(ops)),
+            key=lambda i: (
+                -_op_gather_link_bytes(ops[i], "dcn"),
+                -_op_gather_bytes(ops[i]),
+                i,
+            ),
+        )
     )
     n = len(order)
     stages = []
@@ -720,6 +805,12 @@ def _compile_schedule(
                 ops[c_op].comm.predicted_bytes
                 if c_op is not None and ops[c_op].comm is not None else 0
             ),
+            dcn_gather_bytes=(
+                _op_gather_link_bytes(ops[g_op], "dcn") if g_op is not None else 0
+            ),
+            dcn_overlap_bytes=plan_lib.overlappable_ns_bytes(
+                ops[c_op].packed_shape, ns_steps, link="dcn"
+            ) if c_op is not None else 0,
         ))
     return PipelineSchedule(order=order, stages=tuple(stages))
 
@@ -751,9 +842,9 @@ def _compile_phase_gspmd(
         packed = _packed_shape(plans, mode)
         comm = None
         if layer_shard is not None and members[0].plan.spec is None:
-            # The fold of ``distribute_full``: full-step stacks (and
-            # unblocked stacked leaves on block steps) re-shard their layer
-            # dim so each rank orthogonalizes only its share.
+            # ``muon(layer_shard=)``: full-step stacks (and unblocked
+            # stacked leaves on block steps) re-shard their layer dim so
+            # each rank orthogonalizes only its share.
             comm, packed = _layer_shard_comm(packed, layer_shard)
         ops.append(
             BucketOp(
@@ -797,6 +888,7 @@ def _compile_phase_engine(
     from repro.sharding.specs import local_shape, spec_entry_size
 
     sizes = dict(engine.axis_sizes)
+    flatten_for = getattr(engine, "flatten_for", lambda key: None)
     mode = "concat"
     leaf_execs: list[LeafExec] = []
     for i, ls in enumerate(leaf_specs):
@@ -825,13 +917,54 @@ def _compile_phase_engine(
             spec2d = blocking.BlockSpec2D(rr, rc) if rr * rc > 1 else None
             eff = (m // bs.r, n // bs.c)
         plan = bucketing_lib.plan_leaf(body_shape, ls.dtype, spec2d, mode)
+        apply_op = None
+        out_spec = None
+        lead = None
+        fl = flatten_for(ls.key)
+        if fl is not None:
+            # ZeRO-1 flatten fallback: the NS input arrives with its lead
+            # dim padded to fl.padded_lead and sharded over the ZeRO axes;
+            # the writeback restores the padded stack (canonical sequence
+            # in plan.lead_gather_collectives) and the update leaves in
+            # the PARAM layout.
+            from jax.sharding import PartitionSpec
+
+            from repro.distributed.plan import lead_gather_collectives
+
+            if int(ls.shape[0]) != fl.padded_lead:
+                raise ValueError(
+                    f"flatten-fallback leaf {ls.key} has lead dim "
+                    f"{ls.shape[0]}, expected padded {fl.padded_lead}"
+                )
+            trailing_elems = 1
+            for dim in shard_shape[1:]:
+                trailing_elems *= int(dim)
+            apply_op = CommOp(
+                kind="apply", axes=fl.axes,
+                collectives=lead_gather_collectives(
+                    int(shard_shape[0]), trailing_elems, fl.axes, sizes
+                ),
+            )
+            out_spec = PartitionSpec(None, *entries[1:])
+            lead = fl.lead
         leaf_execs.append(
             LeafExec(index=i, plan=plan, eff_dims=eff, dtype=ls.dtype,
-                     spec=spec, gather=gather)
+                     spec=spec, gather=gather, apply=apply_op,
+                     out_spec=out_spec, lead=lead)
         )
 
     pipelined = phase == "full" and full_schedule == "pipelined"
-    vmem_budget = dispatch.pipeline_vmem_budget() if pipelined else None
+    vmem_budget = None
+    if pipelined:
+        # A DCN gather stays in flight ~8x longer than an ICI one, so its
+        # landing buffers occupy VMEM across more NS chains — plan kernels
+        # against the larger per-link reserve when any stage gathers over
+        # the inter-pod link.
+        has_dcn = any(
+            le.gather is not None and le.gather.predicted_link_bytes("dcn")
+            for le in leaf_execs
+        )
+        vmem_budget = dispatch.pipeline_vmem_budget("dcn" if has_dcn else "ici")
     ops = []
     for key, members, compute_dtype, merged in _group_buckets(
         leaf_execs, mode, bucketing

@@ -18,17 +18,27 @@ step's fwd/bwd collectives would drown the optimizer's — so the measured
 schedule is exactly what the plan prices. ``assert_matches_plan`` is the
 test-facing check: zero collectives on block steps, plan-matching bytes on
 full steps, within a tolerance for stray scalar traffic.
+
+Mesh-axis attribution (hierarchical meshes): every collective's
+``replica_groups`` (both the explicit ``{{0,1},{2,3}}`` list form and the
+iota ``[G,S]<=[dims]T(perm)`` form) are parsed and mapped back to the mesh
+axes the groups vary over, so measured bytes split per axis set
+(:func:`bytes_by_axes`) and per link class (:func:`bytes_by_link`) in the
+same keying ``CommPlan.predicted_by_axes`` / ``predicted_by_link`` use.
+``assert_no_inter_pod`` is the block-step gate on a multi-pod mesh: zero
+bytes may traverse an axis in ``plan.DCN_AXES``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
+from typing import Any, Optional
 
 import jax
+import numpy as np
 
-from repro.distributed.plan import CommPlan
+from repro.distributed.plan import DCN_AXES, CommPlan, link_class
 
 COLLECTIVE_OPS = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
@@ -82,20 +92,72 @@ DTYPE_BYTES = {
 }
 
 
-def parse_collective_sizes(hlo_text: str) -> list[tuple[str, int]]:
-    """Per-event collective sizes: one ``(op, result_bytes)`` per HLO op.
+# replica_groups={{0,1},{2,3}} (explicit) or [4,2]<=[2,2,2]T(1,0,2) (iota v2)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{((?:\{[\d,]*\},?\s*)*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveEvent:
+    """One measured collective: op, result bytes, and its replica groups."""
+
+    op: str
+    bytes: int
+    groups: Optional[tuple[tuple[int, ...], ...]] = None
+
+
+def _parse_replica_groups(line: str) -> Optional[tuple[tuple[int, ...], ...]]:
+    """Device-id groups of one HLO collective line, both textual forms.
+
+    The iota form ``[G,S]<=[d0,d1,...]T(p0,p1,...)`` materializes to
+    ``transpose(reshape(iota, dims), perm).reshape(G, S)`` per the HLO
+    spec; the explicit form lists the groups outright. Returns ``None``
+    when the line carries no parsable replica_groups (attribution then
+    degrades gracefully to "unknown axes").
+    """
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        groups = []
+        for grp in re.findall(r"\{([\d,]*)\}", m.group(1)):
+            ids = tuple(int(x) for x in grp.split(",") if x)
+            if ids:
+                groups.append(ids)
+        return tuple(groups) if groups else None
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",") if x]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",") if x]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(n_groups, group_size)
+        return tuple(tuple(int(x) for x in row) for row in ids)
+    return None
+
+
+def parse_collective_events(hlo_text: str) -> list[CollectiveEvent]:
+    """Per-event collectives with replica groups, one per HLO op.
 
     Same exclusions and byte convention as :func:`parse_collectives` (which
     aggregates this list), but keeps the individual events so a pipelined
-    schedule's per-stage gathers can be attributed: async ``-start`` forms
+    schedule's per-stage gathers can be attributed and each event can be
+    mapped to the mesh axes its groups vary over: async ``-start`` forms
     count once with only their result buffers, and an op the collective
     combiner merged (tuple result) is still ONE event whose bytes are the
     whole tuple — exactly how a combined same-stage gather should read.
     """
     const = _constant_derived(hlo_text)
-    events: list[tuple[str, int]] = []
-    for m in _LINE_RE.finditer(hlo_text):
-        result, op, is_start, operand_str = m.group(1), m.group(2), m.group(3), m.group(4)
+    events: list[CollectiveEvent] = []
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        result, op, is_start, operand_str = (
+            m.group(1), m.group(2), m.group(3), m.group(4)
+        )
         operands = _OPERAND_RE.findall(operand_str)
         if operands and all(o in const for o in operands):
             continue
@@ -111,8 +173,108 @@ def parse_collective_sizes(hlo_text: str) -> list[tuple[str, int]]:
                 if d:
                     elem *= int(d)
             nbytes += elem
-        events.append((op, nbytes))
+        events.append(CollectiveEvent(
+            op=op, bytes=nbytes, groups=_parse_replica_groups(line)
+        ))
     return events
+
+
+def parse_collective_sizes(hlo_text: str) -> list[tuple[str, int]]:
+    """Per-event collective sizes: ``(op, result_bytes)`` per HLO op.
+
+    Thin view over :func:`parse_collective_events` kept for callers that
+    only need sizes (stage attribution, aggregation).
+    """
+    return [(e.op, e.bytes) for e in parse_collective_events(hlo_text)]
+
+
+def mesh_device_coords(mesh) -> dict[int, tuple[int, ...]]:
+    """Logical device position -> mesh coordinates.
+
+    Post-SPMD replica groups name devices by their LOGICAL position in the
+    compiled executable's device assignment — i.e. the flattened order of
+    ``mesh.devices`` — not by physical ``device.id`` (on a real TPU slice
+    ``mesh_utils`` reorders devices for ICI topology, so the two differ;
+    forced-host-CPU meshes coincide). Keying by flat position is correct
+    on both.
+    """
+    devices = np.asarray(mesh.devices)
+    return {
+        pos: tuple(int(i) for i in idx)
+        for pos, idx in enumerate(np.ndindex(devices.shape))
+    }
+
+
+def collective_axes(groups, mesh,
+                    coords: Optional[dict] = None) -> tuple[str, ...]:
+    """Mesh axes a collective's replica groups vary over (sorted names).
+
+    A group containing devices that differ in their coordinate along mesh
+    axis k means the collective moves data across k. Logical ids outside
+    the mesh (single-device CPU stand-ins) attribute to no axis.
+    ``coords`` may be precomputed with :func:`mesh_device_coords` when
+    attributing many events against one mesh.
+    """
+    if coords is None:
+        coords = mesh_device_coords(mesh)
+    names = list(mesh.axis_names)
+    varying: set[str] = set()
+    for group in groups or ():
+        pts = [coords[g] for g in group if g in coords]
+        if len(pts) < 2:
+            continue
+        for k, name in enumerate(names):
+            if len({p[k] for p in pts}) > 1:
+                varying.add(name)
+    return tuple(sorted(varying))
+
+
+def bytes_by_axes(result: "AuditResult", mesh,
+                  ops: tuple = COLLECTIVE_OPS) -> dict[tuple[str, ...], int]:
+    """Measured bytes per (sorted) mesh-axis set — the keying
+    ``CommPlan.predicted_by_axes`` predicts in. Events with no parsable
+    replica groups key under ``('?',)`` so they cannot silently vanish."""
+    coords = mesh_device_coords(mesh)
+    out: dict[tuple[str, ...], int] = {}
+    for e in result.collective_events:
+        if e.op not in ops:
+            continue
+        key = collective_axes(e.groups, mesh, coords) if e.groups else ("?",)
+        out[key] = out.get(key, 0) + e.bytes
+    return out
+
+
+def bytes_by_link(result: "AuditResult", mesh,
+                  ops: tuple = COLLECTIVE_OPS) -> dict[str, int]:
+    """Measured bytes per modeled link class ({'ici': ..., 'dcn': ...}).
+
+    Unattributable events (``('?',)`` — no parsable replica groups, e.g. a
+    collective-permute's source_target_pairs) count as 'dcn' so the
+    inter-pod gates FAIL CLOSED: a collective the parser cannot place must
+    be explained, not waved through. :func:`bytes_by_axes` keeps them
+    visible under ``('?',)`` for debugging.
+    """
+    out = {"ici": 0, "dcn": 0}
+    for axes, nbytes in bytes_by_axes(result, mesh, ops).items():
+        out["dcn" if axes == ("?",) else link_class(axes)] += nbytes
+    return out
+
+
+def inter_pod_bytes(result: "AuditResult", mesh,
+                    ops: tuple = COLLECTIVE_OPS) -> int:
+    """Measured bytes traversing any inter-pod (DCN) mesh axis."""
+    return bytes_by_link(result, mesh, ops)["dcn"]
+
+
+def assert_no_inter_pod(result: "AuditResult", mesh,
+                        ops: tuple = COLLECTIVE_OPS) -> None:
+    """The multi-pod block-step gate: zero bytes may cross the pod boundary."""
+    measured = inter_pod_bytes(result, mesh, ops)
+    if measured:
+        raise AssertionError(
+            f"collectives move {measured} B over inter-pod axes "
+            f"{DCN_AXES}: {bytes_by_axes(result, mesh, ops)}"
+        )
 
 
 def parse_collectives(hlo_text: str) -> dict:
@@ -136,6 +298,7 @@ class AuditResult:
 
     collectives: dict  # op -> {"count": int, "bytes": int}
     events: tuple = () # per-op (name, result_bytes) in HLO text order
+    collective_events: tuple = ()  # CollectiveEvent records (with groups)
 
     @property
     def total_bytes(self) -> int:
@@ -154,9 +317,11 @@ class AuditResult:
 
 def audit_compiled(compiled) -> AuditResult:
     text = compiled.as_text()
+    events = tuple(parse_collective_events(text))
     return AuditResult(
         collectives=parse_collectives(text),
-        events=tuple(parse_collective_sizes(text)),
+        events=tuple((e.op, e.bytes) for e in events),
+        collective_events=events,
     )
 
 
@@ -227,6 +392,36 @@ def assert_matches_plan(result: AuditResult, plan: CommPlan, phase: str, *,
         )
 
 
+def assert_matches_plan_by_axes(result: AuditResult, plan: CommPlan, phases,
+                                mesh, *, ops: tuple = ("all-gather",
+                                                       "reduce-scatter",
+                                                       "all-to-all")) -> dict:
+    """Exact per-axis-set comparison of measured vs planned bytes.
+
+    ``phases`` may be one phase name or a tuple to sum (a flatten-fallback
+    step executes its 'apply' gathers inside the block/full body, so those
+    audits compare against e.g. ``('block', 'apply')``). Engine-path only:
+    the shard_map body's collectives are hand-written against named axes,
+    so the comparison is exact — zero tolerance. Returns the measured
+    per-axes dict on success.
+    """
+    if isinstance(phases, str):
+        phases = (phases,)
+    predicted: dict[tuple[str, ...], int] = {}
+    for phase in phases:
+        for axes, nbytes in plan.predicted_by_axes(phase).items():
+            predicted[axes] = predicted.get(axes, 0) + nbytes
+    measured = bytes_by_axes(result, mesh, ops)
+    pred = {k: v for k, v in predicted.items() if v}
+    meas = {k: v for k, v in measured.items() if v}
+    if pred != meas:
+        raise AssertionError(
+            f"per-axis collective bytes mismatch for phases {phases}:\n"
+            f"  plan: {pred}\n  hlo:  {meas}"
+        )
+    return measured
+
+
 def attribute_gathers_to_stages(result: AuditResult, prog_phase,
                                 *, op: str = "all-gather") -> dict[int, int]:
     """Attribute measured gather events to the phase's pipeline stages.
@@ -247,8 +442,9 @@ def attribute_gathers_to_stages(result: AuditResult, prog_phase,
     if schedule is None:
         raise AssertionError("phase has no pipeline schedule to attribute to")
     # Expected gather collectives, grouped per stage: the stage's leaf
-    # gathers plus any bucket-level comm its compute op issues (the engine
-    # layer_shard fold's all-gather runs inside the compute).
+    # gathers, any bucket-level comm its compute op issues (the engine
+    # layer_shard fold's all-gather runs inside the compute), and the
+    # flatten-fallback writeback gathers of the leaves it slices back.
     expected: list[tuple[int, list[int]]] = []
     for stage in schedule.stages:
         sizes = []
@@ -259,6 +455,10 @@ def attribute_gathers_to_stages(result: AuditResult, prog_phase,
             comm = prog_phase.ops[stage.compute].comm
             if comm is not None:
                 sizes += [b for o, _, b in comm.collectives if o == op]
+        for li in stage.writeback:
+            apply_op = getattr(prog_phase.leaf_execs[li], "apply", None)
+            if apply_op is not None:
+                sizes += [b for o, _, b in apply_op.collectives if o == op]
         if sizes:
             expected.append((stage.index, sizes))
     events = sorted(b for o, b in result.events if o == op)
@@ -314,11 +514,18 @@ def assert_pipelined_matches_plan(result: AuditResult, prog_phase, plan: CommPla
         for bop in prog_phase.ops if bop.comm is not None
         for o, _, b in bop.comm.collectives if o == "all-gather"
     )
-    predicted = plan.predicted_bytes(phase) + bucket_comm
+    apply_comm = sum(
+        b
+        for le in prog_phase.leaf_execs
+        if getattr(le, "apply", None) is not None
+        for o, _, b in le.apply.collectives if o == "all-gather"
+    )
+    predicted = plan.predicted_bytes(phase) + bucket_comm + apply_comm
     if measured != predicted:
         raise AssertionError(
             f"pipelined {phase!r} gather bytes {measured} != plan {predicted} "
-            f"(leaf {plan.predicted_bytes(phase)} + bucket {bucket_comm})"
+            f"(leaf {plan.predicted_bytes(phase)} + bucket {bucket_comm}"
+            f" + zero1-apply {apply_comm})"
             f"\n  hlo: {result.collectives}"
         )
     attributed = attribute_gathers_to_stages(result, prog_phase)

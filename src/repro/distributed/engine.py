@@ -40,14 +40,27 @@ bucket fits VMEM) — even block steps get maximum batching (the GSPMD
 program must stack-pack to avoid resharding; the shard_map body has no such
 constraint).
 
-ZeRO-1 composes transparently: the engine's in/out specs are the *momentum*
+ZeRO-1 composes transparently: the engine's in specs are the *momentum*
 specs (``sharding.specs.momentum_spec``), so a data-sharded leading stack
 dim simply makes the local NS batch smaller — full-step gathers move
 1/data_size of the bytes and each rank orthogonalizes only its own layers.
+On a hierarchical ``('pod', 'data', 'model')`` mesh the ZeRO axes default
+to ``('pod', 'data')`` and, because every collective here is written
+against a *named* axis, gathers only ever traverse the axes a leaf's spec
+names: trailing-dim (model) gathers stay intra-pod by construction, and
+the only inter-pod collectives are the ones the plan prices as such.
+
+When ``num_layers`` does not divide the ZeRO axes (granite: 36 vs 16) the
+*flatten-and-shard fallback* (``zero1_flatten=True``) stores the momentum
+with its lead dim ceil-padded to a multiple of the axes and sharded —
+block/full steps run unchanged on each rank's own (padded) layers, and the
+one extra cost is the writeback: per-axis all-gathers restore the padded
+update stack and a local slice drops the pad, so updates leave the region
+in the PARAM layout (priced in the plan's 'apply' phase).
 
 ``core.muon.muon(..., comm=engine)`` compiles the update program against
-this engine; it supersedes the GSPMD ``layer_shard`` program option (the
-former ``distribute_full``), which is mutually exclusive with it.
+this engine. ``muon(layer_shard=...)`` composes with it as the explicit
+in-body fold (and remains the GSPMD re-shard without an engine).
 """
 
 from __future__ import annotations
@@ -113,13 +126,21 @@ class ShardMapEngine:
     ``uspec_by_path`` maps param-tree path keys to the *momentum* spec of
     that leaf (param spec, plus the ZeRO-1 lead-dim data sharding when
     enabled) — the sharding the NS input ``u = g + mu*m`` arrives in and
+    (except for flatten-fallback leaves, which leave in the param layout)
     the sharding the orthogonalized update leaves in. The program compiler
     reads it via :meth:`spec_for` to plan gathers and device-local bucket
     shapes.
+
+    ``flatten_by_path`` records the ZeRO-1 flatten-and-shard fallback
+    (``sharding.specs.FlattenSpec``) for leaves whose lead dim does not
+    divide the ZeRO axes: their momentum is stored lead-padded + sharded
+    (:meth:`state_shape_for` tells ``muon.init``/``muon.update`` the
+    padded shape) and the program attaches the writeback 'apply' CommOp.
     """
 
     mesh: Mesh
     uspec_by_path: dict
+    flatten_by_path: dict = dataclasses.field(default_factory=dict)
 
     @property
     def axis_sizes(self) -> dict[str, int]:
@@ -130,6 +151,18 @@ class ShardMapEngine:
         if spec is None:
             return P(*(None,) * ndim)
         return P(*_entries(spec, ndim)[:ndim])
+
+    def flatten_for(self, key: PathKey):
+        """FlattenSpec of a ZeRO-1 flatten-fallback leaf, or None."""
+        return self.flatten_by_path.get(key)
+
+    def state_shape_for(self, key: PathKey, shape: tuple) -> tuple:
+        """Momentum/NS-input shape for a leaf — lead-padded under the
+        flatten fallback, the param shape otherwise."""
+        fl = self.flatten_by_path.get(key)
+        if fl is None:
+            return tuple(shape)
+        return fl.padded_shape(shape)
 
     def _layer_shard_apply(self, sizes: dict[str, int]) -> Callable:
         """Explicit in-body layer_shard: local slice -> NS share -> all-gather.
@@ -192,7 +225,29 @@ class ShardMapEngine:
         sizes = self.axis_sizes
         leaf_execs = prog.leaf_execs
         specs = tuple(le.spec for le in leaf_execs)
+        # Flatten-fallback leaves leave the region in the PARAM layout (the
+        # writeback gathered their padded lead dim); everything else keeps
+        # its momentum spec.
+        out_specs = tuple(
+            le.out_spec if le.out_spec is not None else le.spec
+            for le in leaf_execs
+        )
         ls_apply = self._layer_shard_apply(sizes)
+
+        def writeback(o, le):
+            """Slice the trailing shard back out, then (flatten fallback
+            only) gather the padded lead dim per ZeRO axis — minor axis
+            first, mirroring the trailing-dim gathers — and drop the pad
+            (local slice)."""
+            if le.gather is not None:
+                o = _slice_trailing(o, le.spec, sizes)
+            if le.apply is not None:
+                for name in reversed(le.apply.axes):
+                    if sizes.get(name, 1) > 1:
+                        o = jax.lax.all_gather(o, name, axis=0, tiled=True)
+                if le.lead is not None and o.shape[0] != le.lead:
+                    o = jax.lax.slice_in_dim(o, 0, le.lead, axis=0)
+            return o
 
         def barrier_body(*xs):
             ins = [
@@ -203,8 +258,7 @@ class ShardMapEngine:
                 prog.ops, ins, orth, layer_shard_apply=ls_apply
             )
             return tuple(
-                _slice_trailing(o, le.spec, sizes) if le.gather is not None else o
-                for o, le in zip(outs, leaf_execs)
+                writeback(o, le) for o, le in zip(outs, leaf_execs)
             )
 
         def pipelined_body(*xs):
@@ -232,12 +286,7 @@ class ShardMapEngine:
                         pending[idx] = out
                         gate = out
                 for li in stage.writeback:
-                    o = pending.pop(li)
-                    le = leaf_execs[li]
-                    results[li] = (
-                        _slice_trailing(o, le.spec, sizes)
-                        if le.gather is not None else o
-                    )
+                    results[li] = writeback(pending.pop(li), leaf_execs[li])
             assert not pending and all(r is not None for r in results), (
                 "pipeline schedule left leaves unwritten"
             )
@@ -248,23 +297,30 @@ class ShardMapEngine:
             body,
             mesh=self.mesh,
             in_specs=specs,
-            out_specs=specs,
+            out_specs=out_specs,
             check_rep=False,
         )
         return list(fn(*u_leaves))
 
 
 def make_engine(params: Any, pspecs: Any, mesh: Mesh, *, zero1: bool = False,
-                zero1_axis: str = "data") -> ShardMapEngine:
+                zero1_axis=None, zero1_flatten: bool = False) -> ShardMapEngine:
     """Build a :class:`ShardMapEngine` from the param tree + PartitionSpecs.
 
     ``params`` may be arrays or ShapeDtypeStructs (shapes only are read).
     With ``zero1`` the engine's update specs carry the ZeRO-1 lead-dim data
     sharding from ``sharding.specs.momentum_spec`` — pair it with
     ``distributed.zero1`` so the momentum actually lives in those shards.
+    ``zero1_axis`` may be an axis name, a tuple of names, or None for the
+    mesh's data axes (``('pod', 'data')`` on a hierarchical mesh). With
+    ``zero1_flatten``, leaves whose lead dim does not divide the ZeRO axes
+    engage the flatten-and-shard fallback (padded lead dim, recorded in
+    ``flatten_by_path``) instead of silently no-opping.
     """
     sizes = sh.mesh_axis_sizes(mesh)
+    axes = sh.zero1_axes(sizes, zero1_axis)
     uspecs: dict[PathKey, P] = {}
+    flatten: dict[PathKey, Any] = {}
     flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
     spec_leaves = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))[0]
     if len(flat_p) != len(spec_leaves):
@@ -272,7 +328,18 @@ def make_engine(params: Any, pspecs: Any, mesh: Mesh, *, zero1: bool = False,
             f"params/pspecs leaf counts differ: {len(flat_p)}/{len(spec_leaves)}"
         )
     for (path, leaf), spec in zip(flat_p, spec_leaves):
-        uspecs[path_key(path)] = sh.momentum_spec(
-            spec, tuple(leaf.shape), sizes, zero1=zero1, zero1_axis=zero1_axis
+        key = path_key(path)
+        shape = tuple(leaf.shape)
+        fl = (
+            sh.zero1_flatten_info(spec, shape, sizes, zero1_axis=axes)
+            if zero1 and zero1_flatten else None
         )
-    return ShardMapEngine(mesh=mesh, uspec_by_path=uspecs)
+        if fl is not None:
+            flatten[key] = fl
+            uspecs[key] = sh.flatten_momentum_spec(spec, shape, fl)
+        else:
+            uspecs[key] = sh.momentum_spec(
+                spec, shape, sizes, zero1=zero1, zero1_axis=axes
+            )
+    return ShardMapEngine(mesh=mesh, uspec_by_path=uspecs,
+                          flatten_by_path=flatten)

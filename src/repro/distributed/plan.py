@@ -27,13 +27,33 @@ Three accounted phases:
     the full NS redundantly, slice the local shard back out (the slice is
     local — no collective).
   * ``'apply'``  — ZeRO-1 only: updates leave the optimizer sharded over
-    the data axis on the leading stack dim, and applying them to the
+    the data axes on the leading stack dim, and applying them to the
     data-replicated params costs one all-gather per step whose result is
     the update in the *param* layout (still model-sharded on the trailing
     dims). This is outside ``optimizer.update`` (it happens at
     ``params + updates``) but is the price of the d-fold optimizer-state
     HBM cut, so the plan accounts it explicitly instead of letting it
-    hide in fwd/bwd traffic.
+    hide in fwd/bwd traffic. The ZeRO-1 *flatten-and-shard fallback*
+    (``sharding.specs.zero1_flatten_info`` — lead dim ceil-padded to a
+    multiple of the ZeRO axes when ``num_layers`` does not divide them,
+    e.g. granite's 36 layers on a 16-way data axis) is priced here too:
+    its per-axis all-gathers of the padded update stack execute *inside*
+    the shard_map body at writeback (the updates must re-enter the param
+    layout before ``params + updates``), but they are morally the same
+    apply-time gather, so the plan keeps them in 'apply' rather than
+    polluting the block/full phase accounting. No reduce-scatter is
+    needed on this path: gradients arrive pre-reduced (data-replicated)
+    and the momentum writeback is a local slice, so the fallback's only
+    recurring collectives are the gather-class ops priced here.
+
+Hierarchical meshes: every :class:`Collective` records the mesh axes it
+runs over, and each axis has a modeled *link class* — ``'ici'`` for
+intra-pod axes, ``'dcn'`` for the inter-pod ``'pod'`` axis (see
+:data:`DCN_AXES` / :func:`link_class`). ``predicted_bytes(phase,
+link=...)`` and ``predicted_by_axes(phase)`` expose the split so tests can
+assert e.g. that block steps move zero inter-pod bytes, and the pipeline
+schedule prices overlap per link (a DCN gather takes
+``ici_rate/dcn_rate`` times longer to hide).
 """
 
 from __future__ import annotations
@@ -60,9 +80,29 @@ FP32_BYTES = 4
 # throughput model; the FLOP rate is one TPU core's MXU order of magnitude.
 # Both are *modeling* constants — the schedule's exposed-bytes prediction is
 # a planning artifact, not a measurement (the HLO audit measures bytes, the
-# benchmarks measure time).
+# benchmarks measure time). A collective over the inter-pod 'pod' axis runs
+# on the data-center network, modeled at 1/8 of ICI — the ratio that makes
+# "largest inter-pod gather first" the right schedule order.
 MODELED_ICI_BYTES_PER_S = 50e9
 MODELED_NS_FLOPS_PER_S = 100e12
+
+# Mesh axes that traverse the inter-pod (DCN) link; everything else is ICI.
+DCN_AXES = ("pod",)
+LINKS = ("ici", "dcn")
+MODELED_LINK_BYTES_PER_S = {
+    "ici": MODELED_ICI_BYTES_PER_S,
+    "dcn": MODELED_ICI_BYTES_PER_S / 8,
+}
+
+
+def link_class(axes) -> str:
+    """Link a collective over ``axes`` traverses: 'dcn' iff any inter-pod axis.
+
+    A collective whose replica groups span the pod boundary is bottlenecked
+    by the slowest link regardless of how many intra-pod hops it also makes,
+    so one DCN axis makes the whole collective 'dcn'.
+    """
+    return "dcn" if any(a in DCN_AXES for a in axes) else "ici"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +112,10 @@ class Collective:
     op: str                 # 'all-gather' | 'reduce-scatter' | ...
     axes: tuple[str, ...]   # mesh axes it runs over
     bytes: int              # per-device result-buffer bytes (HLO convention)
+
+    @property
+    def link(self) -> str:
+        return link_class(self.axes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,14 +130,18 @@ class LeafCommPlan:
     block: tuple[Collective, ...]
     full: tuple[Collective, ...]
     apply: tuple[Collective, ...]
+    flatten: Optional[Any] = None  # sharding.specs.FlattenSpec (fallback leaves)
 
     def collectives(self, phase: str) -> tuple[Collective, ...]:
         if phase not in PHASES:
             raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
         return getattr(self, phase)
 
-    def predicted_bytes(self, phase: str) -> int:
-        return sum(c.bytes for c in self.collectives(phase))
+    def predicted_bytes(self, phase: str, link: Optional[str] = None) -> int:
+        return sum(
+            c.bytes for c in self.collectives(phase)
+            if link is None or c.link == link
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,8 +151,8 @@ class CommPlan:
     axis_sizes: dict[str, int]
     leaves: tuple[LeafCommPlan, ...]
 
-    def predicted_bytes(self, phase: str) -> int:
-        return sum(leaf.predicted_bytes(phase) for leaf in self.leaves)
+    def predicted_bytes(self, phase: str, link: Optional[str] = None) -> int:
+        return sum(leaf.predicted_bytes(phase, link) for leaf in self.leaves)
 
     def predicted(self, phase: str) -> dict[str, dict[str, int]]:
         """Aggregate {op: {count, bytes}} — the shape parse_collectives emits."""
@@ -116,20 +164,100 @@ class CommPlan:
                 rec["bytes"] += c.bytes
         return out
 
+    def predicted_by_link(self, phase: str) -> dict[str, int]:
+        """Bytes per modeled link class — {'ici': ..., 'dcn': ...}."""
+        return {link: self.predicted_bytes(phase, link) for link in LINKS}
+
+    def predicted_by_axes(self, phase: str) -> dict[tuple[str, ...], int]:
+        """Bytes per (sorted) mesh-axis set a collective traverses.
+
+        The same keying ``audit.bytes_by_axes`` derives from post-SPMD
+        replica groups, so per-axis plan-vs-HLO comparison is direct.
+        """
+        out: dict[tuple[str, ...], int] = {}
+        for leaf in self.leaves:
+            for c in leaf.collectives(phase):
+                key = tuple(sorted(c.axes))
+                out[key] = out.get(key, 0) + c.bytes
+        return out
+
     def summary(self) -> str:
         lines = [f"CommPlan over mesh {self.axis_sizes}:"]
         for phase in PHASES:
             agg = self.predicted(phase)
             total = self.predicted_bytes(phase)
-            lines.append(f"  {phase:5s}: {total} B  {agg if agg else '(no collectives)'}")
+            dcn = self.predicted_bytes(phase, "dcn")
+            link = f" (inter-pod {dcn} B)" if dcn else ""
+            lines.append(
+                f"  {phase:5s}: {total} B{link}  "
+                f"{agg if agg else '(no collectives)'}"
+            )
         return "\n".join(lines)
 
 
+def trailing_gather_collectives(
+    local_elems: int, entries, sizes: dict[str, int]
+) -> tuple[tuple[str, tuple[str, ...], int], ...]:
+    """Per-axis tiled all-gathers of the trailing (matrix) dims.
+
+    THE single source of the trailing-gather pricing sequence — dim -2
+    then -1, one collective per mesh AXIS (minor axis first within a
+    tuple entry), per-device result bytes growing as each axis fills in —
+    mirroring ``engine._gather_trailing`` event-for-event so per-axis
+    audits compare exactly. ``entries`` are the (-2, -1) PartitionSpec
+    entries; ``local_elems`` the fully-local element count. Returns
+    ``(op, axes, bytes)`` tuples (the program CommOp convention; wrap in
+    :class:`Collective` for plan records).
+    """
+    out = []
+    local = local_elems
+    for entry in entries:
+        for name in reversed(_names(entry)):
+            factor = sizes.get(name, 1)
+            if factor > 1:
+                local *= factor
+                out.append(("all-gather", (name,), local * FP32_BYTES))
+    return tuple(out)
+
+
+def lead_gather_collectives(
+    local_lead: int, trailing_elems: int, axes, sizes: dict[str, int]
+) -> tuple[tuple[str, tuple[str, ...], int], ...]:
+    """Per-axis tiled all-gathers restoring a ZeRO-sharded lead dim.
+
+    THE single source of the flatten-fallback writeback pricing — one
+    collective per ZeRO axis, minor axis first (mirroring the engine's
+    writeback), result bytes growing as the padded lead dim fills in with
+    the trailing dims still model-sharded (``trailing_elems`` local
+    elements per layer). Shared by ``_plan_leaf`` and
+    ``core/program.py``'s compiler so plan, program, and measured HLO
+    cannot drift.
+    """
+    out = []
+    acc = local_lead
+    for name in reversed(tuple(axes)):
+        if sizes.get(name, 1) > 1:
+            acc *= sizes[name]
+            out.append(("all-gather", (name,), acc * trailing_elems * FP32_BYTES))
+    return tuple(out)
+
+
 def _plan_leaf(path: str, shape: tuple, spec: P, label: str,
-               sizes: dict[str, int], *, zero1: bool, zero1_axis: str,
+               sizes: dict[str, int], *, zero1: bool, zero1_axis,
+               zero1_flatten: bool = False,
                block_spec=None, has_block_specs: bool = False) -> LeafCommPlan:
-    uspec = sh.momentum_spec(spec, shape, sizes, zero1=zero1,
-                             zero1_axis=zero1_axis, label=label)
+    flatten = (
+        sh.zero1_flatten_info(spec, shape, sizes, zero1_axis=zero1_axis,
+                              label=label)
+        if zero1 and zero1_flatten else None
+    )
+    if flatten is not None:
+        uspec = sh.flatten_momentum_spec(spec, shape, flatten)
+        plan_shape = flatten.padded_shape(shape)
+    else:
+        uspec = sh.momentum_spec(spec, shape, sizes, zero1=zero1,
+                                 zero1_axis=zero1_axis, label=label)
+        plan_shape = tuple(shape)
     entries = list(uspec) + [None] * (len(shape) - len(uspec))
     pspec_entries = list(spec) if spec is not None else []
     pspec_entries += [None] * (len(shape) - len(pspec_entries))
@@ -151,14 +279,14 @@ def _plan_leaf(path: str, shape: tuple, spec: P, label: str,
 
     if label == "muon" and len(shape) >= 2:
         if r * c > 1:
-            # Full step: sequential tiled all-gathers over dim -2 then -1,
-            # mirroring engine._gather_trailing. Result bytes grow as each
-            # dim fills in; the final slice-back is local (no collective).
-            local = math.prod(sh.local_shape(uspec, shape, sizes)) or 1
-            for dim_factor, entry in ((r, pspec_entries[-2]), (c, pspec_entries[-1])):
-                if dim_factor > 1:
-                    local *= dim_factor
-                    full.append(Collective("all-gather", _names(entry), local * FP32_BYTES))
+            # Full step: the canonical trailing-gather sequence (see
+            # trailing_gather_collectives); the final slice-back is local.
+            local = math.prod(sh.local_shape(uspec, plan_shape, sizes)) or 1
+            full += [
+                Collective(*t) for t in trailing_gather_collectives(
+                    local, (pspec_entries[-2], pspec_entries[-1]), sizes
+                )
+            ]
             # Block step: zero collectives iff the leaf HAS a usable block
             # grid; an unblocked-but-sharded leaf is orthogonalized fully
             # every step and pays the same gathers (the engine's condition).
@@ -167,12 +295,23 @@ def _plan_leaf(path: str, shape: tuple, spec: P, label: str,
             bs = (
                 block_spec
                 if has_block_specs
-                else block_spec_from_partition(uspec, shape, sizes)
+                else block_spec_from_partition(uspec, plan_shape, sizes)
             )
             if bs is None or bs.num_blocks == 1:
                 block = list(full)
 
-    if d > 1:
+    if flatten is not None:
+        # Flatten-fallback writeback: the padded update stack re-enters the
+        # param layout inside the shard_map body (canonical sequence in
+        # lead_gather_collectives). The pad slice after is local.
+        loc = sh.local_shape(uspec, plan_shape, sizes)
+        trailing_elems = math.prod(loc[1:]) if len(loc) > 1 else 1
+        apply_ += [
+            Collective(*t) for t in lead_gather_collectives(
+                loc[0], trailing_elems, flatten.axes, sizes
+            )
+        ]
+    elif d > 1:
         # ZeRO-1 apply-time gather: updates are data-sharded on the lead
         # dim; params are data-replicated. One all-gather per leaf per step
         # whose result stays model-sharded on the trailing dims (per-device
@@ -182,13 +321,15 @@ def _plan_leaf(path: str, shape: tuple, spec: P, label: str,
 
     return LeafCommPlan(
         path=path, shape=tuple(shape), spec=P(*entries), label=label,
-        zero1_factor=d, block=tuple(block), full=tuple(full), apply=tuple(apply_),
+        zero1_factor=flatten.factor if flatten is not None else d,
+        block=tuple(block), full=tuple(full), apply=tuple(apply_),
+        flatten=flatten,
     )
 
 
 def plan_comm(params: Any, pspecs: Any, mesh: Mesh, *, labels: Any = None,
               block_specs: Any = None, zero1: bool = False,
-              zero1_axis: str = "data") -> CommPlan:
+              zero1_axis=None, zero1_flatten: bool = False) -> CommPlan:
     """Build the :class:`CommPlan` for one optimizer step.
 
     Args:
@@ -205,8 +346,16 @@ def plan_comm(params: Any, pspecs: Any, mesh: Mesh, *, labels: Any = None,
         blocks-follow-shards configuration (``sharding.specs.block_specs_for``).
       zero1: account first-class ZeRO-1 momentum sharding (lead stack dim
         over ``zero1_axis``; see ``sharding.specs.momentum_spec``).
+      zero1_axis: mesh axis name, tuple of names, or None for the mesh's
+        data axes (``('pod', 'data')`` on a hierarchical multi-pod mesh).
+      zero1_flatten: price the flatten-and-shard fallback for leaves whose
+        lead dim does not divide the ZeRO axes (``num_layers %
+        data_axis != 0``): padded lead-dim sharding plus per-axis
+        writeback gathers in the 'apply' phase. Matches
+        ``make_engine(..., zero1_flatten=True)``.
     """
     sizes = sh.mesh_axis_sizes(mesh)
+    zero1_axis = sh.zero1_axes(sizes, zero1_axis) if zero1 else zero1_axis
     flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
     spec_leaves = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))[0]
     if labels is not None:
@@ -228,6 +377,7 @@ def plan_comm(params: Any, pspecs: Any, mesh: Mesh, *, labels: Any = None,
     leaves = tuple(
         _plan_leaf(_path_str(path), tuple(leaf.shape), spec, label, sizes,
                    zero1=zero1, zero1_axis=zero1_axis,
+                   zero1_flatten=zero1_flatten,
                    block_spec=bs_by_path.get(_path_str(path)),
                    has_block_specs=block_specs is not None)
         for (path, leaf), spec, label in zip(flat_p, spec_leaves, label_leaves)
@@ -259,16 +409,22 @@ def ns_chain_flops(packed_shape, ns_steps: int) -> int:
     return int(stack * ns_steps * (4 * s * s * n + 2 * s ** 3))
 
 
-def overlappable_ns_bytes(packed_shape, ns_steps: int) -> int:
+def overlappable_ns_bytes(packed_shape, ns_steps: int, link: str = "ici") -> int:
     """Collective bytes one bucket's NS chain can hide, in the modeled ratio.
 
     ``time_ns = flops / MODELED_NS_FLOPS_PER_S`` of compute runs while a
-    pipelined gather is in flight; at ``MODELED_ICI_BYTES_PER_S`` that hides
-    ``time_ns * ICI`` bytes. The program's :class:`PipelineStage` exposed
-    bytes are ``max(0, gather_bytes - overlappable_ns_bytes(compute op))``.
+    pipelined gather is in flight; at the link's modeled bandwidth
+    (:data:`MODELED_LINK_BYTES_PER_S` — ICI for intra-pod axes, the slower
+    DCN for inter-pod) that hides ``time_ns * rate`` bytes. The program's
+    :class:`PipelineStage` exposed bytes are
+    ``max(0, gather_bytes - overlappable_ns_bytes(compute op))`` per link
+    class: the same NS chain hides 8x fewer DCN bytes than ICI bytes,
+    which is why the schedule issues the largest *inter-pod* gather first.
     """
+    if link not in MODELED_LINK_BYTES_PER_S:
+        raise ValueError(f"link must be one of {LINKS}, got {link!r}")
     flops = ns_chain_flops(packed_shape, ns_steps)
-    return int(flops / MODELED_NS_FLOPS_PER_S * MODELED_ICI_BYTES_PER_S)
+    return int(flops / MODELED_NS_FLOPS_PER_S * MODELED_LINK_BYTES_PER_S[link])
 
 
 def layer_shard_dims(packed_shape, axis_size: int) -> tuple[int, int, int, int]:

@@ -29,6 +29,28 @@ Full-orthogonalization steps gather only over the *model* axis, and only
 shard. The one recurring cost is the apply-time all-gather of the
 data-sharded updates onto the data-replicated params — params-sized, once
 per step, the standard ZeRO-1 trade for a data_size-fold state-HBM cut.
+
+Hierarchical meshes: the ZeRO axes default to the mesh's *data axes*
+(``sharding.specs.zero1_axes``) — ``('pod', 'data')`` on a
+``('pod', 'data', 'model')`` mesh — so the HBM cut spans the full
+data-parallel extent; the apply-time gather is then the one optimizer
+collective that legitimately crosses the pod boundary (priced as 'dcn' by
+the plan).
+
+Flatten-and-shard fallback: when the lead stack dim does not divide the
+ZeRO axes (granite: 36 layers on the 16-way production data axis) the
+standard rule no-ops. With ``zero1_flatten`` (``make_engine(...,
+zero1_flatten=True)`` + the launchers' ``--zero1-flatten``) the momentum
+is instead stored with its lead dim ceil-padded to a multiple of the axes
+and sharded — equivalent to flattening the layer-major element order and
+sharding at padded-layer granularity, so each rank still owns whole
+layers and block steps stay shard-local. The padded state shapes come
+from ``optimizer.init`` itself (the engine reports them via
+``state_shape_for``), and :func:`opt_specs` recognizes a padded momentum
+leaf by its shape mismatch against the param and emits the padded-lead
+sharding. Updates for these leaves re-enter the param layout inside the
+engine (per-axis writeback all-gathers priced in the plan's 'apply'
+phase), so the train step needs no special casing.
 """
 
 from __future__ import annotations
@@ -76,15 +98,20 @@ def _match_suffix(keys: list[str], index: dict[str, tuple]):
 
 
 def opt_specs(a_opt: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
-              zero1: bool = False, axis: str = ZERO1_AXIS) -> Any:
+              zero1: bool = False, axis=None) -> Any:
     """Pytree of PartitionSpecs matching ``a_opt``.
 
     Momentum/mu/nu subtrees mirror the param layout; with ``zero1`` they
-    additionally shard the leading stack dim over ``axis`` (see
-    ``sharding.specs.momentum_spec``). Leaves with no param match (step
-    counters) are replicated.
+    additionally shard the leading stack dim over ``axis`` (an axis name,
+    tuple of names, or None for the mesh's data axes; see
+    ``sharding.specs.momentum_spec``). A momentum leaf whose lead dim
+    EXCEEDS its param's is recognized as the flatten-and-shard fallback
+    (``muon.init`` padded it to a multiple of the ZeRO axes because the
+    true lead dim does not divide them) and gets the padded-lead sharding.
+    Leaves with no param match (step counters) are replicated.
     """
     sizes = sh.mesh_axis_sizes(mesh)
+    axes = sh.zero1_axes(sizes, axis)
     index = _param_spec_index(a_params, pspecs)
 
     def spec(path, leaf):
@@ -92,14 +119,21 @@ def opt_specs(a_opt: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
         if hit is None or len(hit[1]) != leaf.ndim:
             return P(*(None,) * leaf.ndim)
         pspec, shape, label = hit
+        if tuple(leaf.shape) != tuple(shape):
+            fl = sh.zero1_flatten_info(pspec, shape, sizes, zero1_axis=axes,
+                                       label=label)
+            if (zero1 and fl is not None
+                    and tuple(leaf.shape) == fl.padded_shape(shape)):
+                return sh.flatten_momentum_spec(pspec, shape, fl)
+            return P(*(None,) * leaf.ndim)
         return sh.momentum_spec(pspec, shape, sizes, zero1=zero1,
-                                zero1_axis=axis, label=label)
+                                zero1_axis=axes, label=label)
 
     return jax.tree_util.tree_map_with_path(spec, a_opt)
 
 
 def opt_shardings(a_opt: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
-                  zero1: bool = False, axis: str = ZERO1_AXIS) -> Any:
+                  zero1: bool = False, axis=None) -> Any:
     """Pytree of NamedShardings matching ``a_opt`` (see :func:`opt_specs`)."""
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),
@@ -109,7 +143,7 @@ def opt_shardings(a_opt: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
 
 
 def attach(a_opt: Any, a_params: Any, mesh: Mesh, *, zero1: bool = False,
-           axis: str = ZERO1_AXIS) -> Any:
+           axis=None) -> Any:
     """ShapeDtypeStructs for abstract optimizer state with shardings attached.
 
     Dry-run/perf entry point (the old ``dryrun._attach_opt_shardings``).
@@ -122,7 +156,7 @@ def attach(a_opt: Any, a_params: Any, mesh: Mesh, *, zero1: bool = False,
 
 
 def shard_state(opt_state: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
-                zero1: bool = True, axis: str = ZERO1_AXIS) -> Any:
+                zero1: bool = True, axis=None) -> Any:
     """device_put real optimizer state into its (ZeRO-1) shards."""
     shardings = opt_shardings(opt_state, a_params, mesh, pspecs=pspecs,
                               zero1=zero1, axis=axis)

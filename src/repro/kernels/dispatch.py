@@ -50,8 +50,15 @@ STRATEGIES = ("auto", "jnp", "fused_chain", "fused_iter", "tiled")
 # A stage that would fill the whole budget with its own working set would
 # stall the overlap the schedule exists to create, so pipelined kernel
 # planning runs against ``pipeline_vmem_budget()`` instead of the full
-# budget (see core/program.py's compiler).
+# budget (see core/program.py's compiler). The reserve is per LINK CLASS:
+# an inter-pod (DCN) gather drains ~8x slower than an intra-pod (ICI) one
+# (distributed/plan.py's modeled rates), so its landing buffers stay live
+# across more NS chains and the stage reserves proportionally more.
 PIPELINE_VMEM_RESERVE_BYTES = 2 * 2 ** 20
+PIPELINE_VMEM_RESERVE_BY_LINK = {
+    "ici": PIPELINE_VMEM_RESERVE_BYTES,
+    "dcn": 2 * PIPELINE_VMEM_RESERVE_BYTES,
+}
 
 _REGISTRY: dict[str, Callable] = {}
 _override: Optional[str] = None
@@ -97,11 +104,23 @@ def use_backend(name: str):
         set_backend(prev)
 
 
-def pipeline_vmem_budget() -> int:
-    """VMEM budget for kernel planning inside a pipelined full-step stage."""
+def pipeline_vmem_budget(link: str = "ici") -> int:
+    """VMEM budget for kernel planning inside a pipelined full-step stage.
+
+    ``link`` is the class of the in-flight gather's slowest mesh axis
+    ('ici' intra-pod, 'dcn' inter-pod) — DCN stages reserve twice the
+    headroom because their collective buffers stay live ~8x longer.
+    """
     from repro.kernels.newton_schulz import fused
 
-    return fused.VMEM_BUDGET_BYTES - PIPELINE_VMEM_RESERVE_BYTES
+    try:
+        reserve = PIPELINE_VMEM_RESERVE_BY_LINK[link]
+    except KeyError:
+        raise ValueError(
+            f"link must be one of {tuple(PIPELINE_VMEM_RESERVE_BY_LINK)}, "
+            f"got {link!r}"
+        ) from None
+    return fused.VMEM_BUDGET_BYTES - reserve
 
 
 def plan_strategy(shape, backend: str, *, vmem_budget: Optional[int] = None) -> str:

@@ -1,5 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Default to the 512-device pod simulation, but only when the caller has
+# not already forced a device count (scripts/ci.sh's 8-device smoke does);
+# unrelated pre-existing XLA_FLAGS (e.g. --xla_dump_to) are preserved.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
 
@@ -24,6 +31,10 @@ Results append to experiments/dryrun/<arch>__<shape>__<mesh>[__phase].json
 Usage:
   python -m repro.launch.dryrun --arch granite-8b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+  # 8-device hierarchical smoke (scripts/ci.sh):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.dryrun --arch muonbp-960m --shape train_smoke \
+    --mesh pod=2,data=2,model=2 --reduced --no-calibrate
 """
 
 import argparse
@@ -41,7 +52,7 @@ from repro.configs.base import InputShape, ModelConfig
 from repro.core import adamw, combine, label_tree, muon
 from repro.distributed import make_engine, parse_collectives  # noqa: F401 (re-export)
 from repro.distributed import zero1 as zero1_lib
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_mesh_from_spec, make_production_mesh
 from repro.models.model import decode_step, init_params, prefill
 from repro.models.transformer import init_cache
 from repro.sharding import specs as sh
@@ -140,7 +151,7 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
     """Build + lower the step function for one (cfg, shape) on a mesh.
 
     ``variant`` holds beyond-paper optimization knobs for the Perf loop:
-      distribute_full: bool — layer_shard program CommOp over 'data' for
+      layer_shard: bool     — layer_shard program CommOp over 'data' for
                               full-step stacks (explicit slice/all-gather
                               fold on the shard_map engine; GSPMD re-shard
                               with --engine gspmd)
@@ -150,6 +161,8 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
                               default, repro.distributed) or 'gspmd' for
                               the implicit-partitioner A/B
       zero1: bool           — first-class ZeRO-1 momentum sharding
+      zero1_flatten: bool   — ZeRO-1 flatten-and-shard fallback for
+                              layer counts that don't divide the ZeRO axes
       full_schedule: str    — engine full-step schedule ('pipelined'
                               default / 'barrier' A/B)
     """
@@ -159,13 +172,14 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
     if shape.kind == "train":
         a_params, pspecs = abstract_params(cfg, mesh, jnp.float32)
         zero1 = bool(v.get("zero1"))
-        dist = (mesh, "data") if v.get("distribute_full") else None
+        dist = (mesh, "data") if v.get("layer_shard") else None
         # The explicit shard_map engine is the default distributed path
         # (ROADMAP: its schedule matches CommPlan exactly; GSPMD drifts) —
         # including for layer_shard, which the engine folds in explicitly.
         engine_name = v.get("engine", "shard_map")
         comm = (
-            make_engine(a_params, pspecs, mesh, zero1=zero1)
+            make_engine(a_params, pspecs, mesh, zero1=zero1,
+                        zero1_flatten=bool(v.get("zero1_flatten")))
             if engine_name == "shard_map" else None
         )
         optimizer = make_optimizer(cfg, mesh, a_params, pspecs, period=period,
@@ -263,16 +277,32 @@ def calibrate_costs(cfg, shape, mesh, ctx, phase: str, period: int, full_layers:
     return out
 
 
+def mesh_name(mesh) -> str:
+    return "x".join(str(d) for d in mesh.devices.shape)
+
+
 def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False, phase: str = "block",
-                period: int = 5, calibrate: bool = True, variant: dict | None = None):
-    """Lower+compile one combination; returns the result record."""
+                period: int = 5, calibrate: bool = True, variant: dict | None = None,
+                mesh_spec: str | None = None, reduced: bool = False):
+    """Lower+compile one combination; returns the result record.
+
+    ``mesh_spec`` (e.g. ``'pod=2,data=2,model=2'``) overrides the
+    production mesh — the CI hierarchical smoke runs the (2,2,2) mesh on 8
+    forced host devices this way. ``reduced`` lowers the config's reduced
+    variant (CPU-compilable).
+    """
     cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
     shape = get_shape(shape_name)
     if not shape_applies(cfg, shape):
         return {"arch": arch, "shape": shape_name, "skipped": True,
                 "reason": "full-attention arch: long_500k requires sub-quadratic attention (DESIGN.md)"}
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = (
+        make_mesh_from_spec(mesh_spec) if mesh_spec
+        else make_production_mesh(multi_pod=multi_pod)
+    )
     ctx = sh.make_ctx(cfg, mesh, global_batch=shape.global_batch)
     t0 = time.time()
     lowered = _lower(cfg, shape, mesh, ctx, phase, period, variant)
@@ -306,7 +336,8 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False, phase: s
     return {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": mesh_name(mesh),
+        "mesh_axes": list(mesh.axis_names),
         "phase": phase if shape.kind == "train" else None,
         "kind": shape.kind,
         "lower_s": round(t_lower, 1),
@@ -333,9 +364,12 @@ def _attach_opt_shardings(a_opt, a_params, mesh, zero1: bool = False):
 # CLI
 # ---------------------------------------------------------------------------
 
-def result_path(arch, shape, multi_pod, phase, variant=None):
-    mesh = "2x16x16" if multi_pod else "16x16"
+def result_path(arch, shape, multi_pod, phase, variant=None, mesh_label=None,
+                reduced=False):
+    mesh = mesh_label or ("2x16x16" if multi_pod else "16x16")
     name = f"{arch}__{shape}__{mesh}"
+    if reduced:
+        name += "__reduced"
     if phase:
         name += f"__{phase}"
     # Non-default variants get their own artifact: a --full-schedule barrier
@@ -347,20 +381,28 @@ def result_path(arch, shape, multi_pod, phase, variant=None):
     return os.path.join(RESULTS_DIR, name + ".json")
 
 
-def run_and_save(arch, shape, multi_pod, phase, skip_existing=True, variant=None):
+def run_and_save(arch, shape, multi_pod, phase, skip_existing=True, variant=None,
+                 mesh_spec=None, reduced=False, calibrate=True):
+    mesh_label = None
+    if mesh_spec:
+        from repro.launch.mesh import parse_mesh_spec
+
+        mesh_label = "x".join(str(d) for d in parse_mesh_spec(mesh_spec)[1])
     path = result_path(arch, shape, multi_pod,
                        phase if get_shape(shape).kind == "train" else None,
-                       variant=variant)
+                       variant=variant, mesh_label=mesh_label, reduced=reduced)
+    mesh_str = mesh_label or ("2x16x16" if multi_pod else "16x16")
     if skip_existing and os.path.exists(path):
         print(f"[skip existing] {path}")
         return
-    label = f"{arch} x {shape} x {'2x16x16' if multi_pod else '16x16'}" + (f" x {phase}" if phase else "")
+    label = f"{arch} x {shape} x {mesh_str}" + (f" x {phase}" if phase else "")
     print(f"[dryrun] {label} ...", flush=True)
     try:
         rec = lower_combo(arch, shape, multi_pod=multi_pod, phase=phase or "block",
-                          variant=variant)
+                          variant=variant, mesh_spec=mesh_spec, reduced=reduced,
+                          calibrate=calibrate)
     except Exception:
-        rec = {"arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16",
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_str,
                "phase": phase, "error": traceback.format_exc()}
         print(rec["error"], flush=True)
     os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -376,16 +418,38 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
-    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="production hierarchical mesh: (2,16,16) over "
+                         "('pod','data','model')")
+    ap.add_argument("--mesh", default=None,
+                    help="explicit mesh spec, e.g. 'pod=2,data=2,model=2'; "
+                         "overrides --multi-pod (CI runs the 8-device "
+                         "(2,2,2) smoke this way)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="lower the reduced (CPU-compilable) config variant")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the small-L unrolled calibration compiles")
     ap.add_argument("--phase", default=None, choices=[None, "block", "full"])
     ap.add_argument("--full-schedule", default=None,
                     choices=["pipelined", "barrier"],
                     help="engine full-step schedule (default pipelined; "
                          "'barrier' lowers the gather-all/NS-all/slice-all A/B)")
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1 momentum sharding over the mesh's data axes")
+    ap.add_argument("--zero1-flatten", action="store_true",
+                    help="with --zero1: flatten-and-shard fallback for "
+                         "indivisible layer counts")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true", help="re-run existing results")
     args = ap.parse_args()
-    variant = {"full_schedule": args.full_schedule} if args.full_schedule else None
+    variant = {}
+    if args.full_schedule:
+        variant["full_schedule"] = args.full_schedule
+    if args.zero1:
+        variant["zero1"] = True
+    if args.zero1_flatten:
+        variant["zero1_flatten"] = True
+    variant = variant or None
 
     combos = []
     if args.all:
@@ -402,7 +466,8 @@ def main():
 
     for arch, shape, mp, phase in combos:
         run_and_save(arch, shape, mp, phase, skip_existing=not args.force,
-                     variant=variant)
+                     variant=variant, mesh_spec=args.mesh, reduced=args.reduced,
+                     calibrate=not args.no_calibrate)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ lives in EXPERIMENTS.md; this is the measurement tool.
 
 Usage:
   python -m repro.launch.perf --name granite_full_dist \
-      --arch granite-8b --shape train_4k --phase full --distribute-full
+      --arch granite-8b --shape train_4k --phase full --layer-shard
 """
 
 import argparse
@@ -28,13 +28,24 @@ def main():
     ap.add_argument("--shape", required=True)
     ap.add_argument("--phase", default="block")
     ap.add_argument("--period", type=int, default=5)
-    ap.add_argument("--distribute-full", action="store_true")
+    ap.add_argument("--layer-shard", "--distribute-full", action="store_true",
+                    dest="layer_shard",
+                    help="muon(layer_shard=): split full-step stacks over "
+                         "'data' so each rank orthogonalizes only its share "
+                         "of layers (explicit fold on the shard_map engine; "
+                         "GSPMD re-shard with --engine gspmd)")
     ap.add_argument("--accum-steps", type=int, default=1)
     ap.add_argument("--ring-cache", action="store_true")
     ap.add_argument("--kv-seq-shard", action="store_true")
     ap.add_argument("--flash-block-k", type=int, default=0)
     ap.add_argument("--zero1", action="store_true",
                     help="first-class ZeRO-1 momentum sharding (distributed.zero1)")
+    ap.add_argument("--zero1-flatten", action="store_true",
+                    help="with --zero1: flatten-and-shard fallback for "
+                         "layer counts that don't divide the ZeRO axes")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh spec, e.g. 'pod=2,data=2,model=2'; default is "
+                         "the 16x16 production mesh")
     ap.add_argument("--engine", default=None,
                     choices=["shard_map", "gspmd"],
                     help="optimizer comm engine (default: the explicit "
@@ -55,17 +66,17 @@ def main():
 
     from repro.launch.dryrun import lower_combo
 
-    # --distribute-full (the layer_shard program CommOp) runs on either
-    # engine: as the explicit slice/all-gather fold inside the shard_map
-    # body (default, exactly priced), or as the GSPMD re-shard with
+    # --layer-shard (the layer_shard program CommOp) runs on either engine:
+    # as the explicit slice/all-gather fold inside the shard_map body
+    # (default, exactly priced), or as the GSPMD re-shard with
     # --engine gspmd (priced by the measured partitioner model).
     engine = args.engine or "shard_map"
 
     variant = {"engine": engine}
     if args.full_schedule:
         variant["full_schedule"] = args.full_schedule
-    if args.distribute_full:
-        variant["distribute_full"] = True
+    if args.layer_shard:
+        variant["layer_shard"] = True
     if args.accum_steps > 1:
         variant["accum_steps"] = args.accum_steps
     if args.ring_cache:
@@ -76,12 +87,14 @@ def main():
         variant["flash_block_k"] = args.flash_block_k
     if args.zero1:
         variant["zero1"] = True
+    if args.zero1_flatten:
+        variant["zero1_flatten"] = True
     if args.bf16_grads:
         variant["bf16_grads"] = True
 
     rec = lower_combo(
         args.arch, args.shape, phase=args.phase, period=args.period,
-        variant=variant or None,
+        variant=variant or None, mesh_spec=args.mesh,
     )
     rec["perf_name"] = args.name
     os.makedirs(RESULTS_DIR, exist_ok=True)

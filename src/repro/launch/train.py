@@ -1,11 +1,16 @@
 """Training launcher: config-driven MuonBP pretraining.
 
-Runs on whatever devices exist (CPU: 1-device mesh; TPU pod: pass
---mesh-model/--mesh-data to match the slice). The MuonBP phase schedule is
-driven here: two compiled step functions, ``step % P == 0`` picks 'full'.
-The optimizer runs through the explicit shard_map comm engine by default
-(its schedule is asserted against CommPlan; ``--comm-engine gspmd`` keeps
-the implicit partitioner path for A/Bs).
+Runs on whatever devices exist (CPU: 1-device mesh; TPU slice: pass
+``--mesh pod=2,data=2,model=2``-style specs — or the legacy ``--mesh-model``
+— to match it). The MuonBP phase schedule is driven here: two compiled step
+functions, ``step % P == 0`` picks 'full'. The optimizer runs through the
+explicit shard_map comm engine by default (its schedule is asserted against
+CommPlan; ``--comm-engine gspmd`` keeps the implicit partitioner path for
+A/Bs). ``--zero1`` shards optimizer state over the mesh's data axes
+(``('pod', 'data')`` on a hierarchical mesh); ``--zero1-flatten`` adds the
+flatten-and-shard fallback for layer counts that don't divide them.
+
+See docs/operators-guide.md for flag-by-flag guidance.
 
 Example (CPU-scale):
   PYTHONPATH=src python -m repro.launch.train \
@@ -102,8 +107,17 @@ def main():
                          "gather-all/NS-all/slice-all A/B; GSPMD always "
                          "runs barrier-style)")
     ap.add_argument("--zero1", action="store_true",
-                    help="shard optimizer state over the data axis (ZeRO-1)")
+                    help="shard optimizer state over the mesh's data axes "
+                         "(ZeRO-1; ('pod','data') on a multi-pod mesh)")
+    ap.add_argument("--zero1-flatten", action="store_true",
+                    help="with --zero1: flatten-and-shard fallback for "
+                         "leaves whose layer count does not divide the "
+                         "ZeRO axes (pads the lead dim; writeback gathers "
+                         "priced in the plan's 'apply' phase)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help="mesh spec, e.g. 'pod=2,data=2,model=2' or '4,2' "
+                         "(data,model); overrides --mesh-model")
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint-every", type=int, default=0)
@@ -115,7 +129,12 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
 
-    mesh = make_local_mesh(model=args.mesh_model)
+    if args.mesh:
+        from repro.launch.mesh import make_mesh_from_spec
+
+        mesh = make_mesh_from_spec(args.mesh)
+    else:
+        mesh = make_local_mesh(model=args.mesh_model)
     ctx = sh.make_ctx(cfg, mesh)
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -141,7 +160,8 @@ def main():
     from repro.distributed import zero1 as zero1_lib
 
     comm = (
-        make_engine(params, pspecs, mesh, zero1=args.zero1)
+        make_engine(params, pspecs, mesh, zero1=args.zero1,
+                    zero1_flatten=args.zero1_flatten)
         if args.comm_engine == "shard_map" else None
     )
     optimizer, period = build_optimizer(

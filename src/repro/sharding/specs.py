@@ -22,7 +22,8 @@ from these PartitionSpecs — the paper's "block = the shard on one device".
 
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Optional, Union
 
 import jax
 import numpy as np
@@ -211,28 +212,139 @@ def block_specs_for(params, specs, mesh: Mesh):
     )
 
 
+ZeroAxes = Union[str, tuple]
+
+
+def zero1_axes(mesh_axis_sizes: dict[str, int],
+               axis: Optional[ZeroAxes] = None) -> tuple[str, ...]:
+    """Normalize/resolve the ZeRO-1 sharding axes for a mesh.
+
+    ``None`` resolves to the mesh's data axes, major-to-minor —
+    ``('pod', 'data')`` on a hierarchical multi-pod mesh, ``('data',)``
+    on the flat one — so optimizer-state sharding spans the full
+    data-parallel extent by default. A string or tuple passes through
+    normalized to a tuple.
+    """
+    if axis is None:
+        return tuple(a for a in ("pod", "data") if a in mesh_axis_sizes)
+    if isinstance(axis, str):
+        return (axis,)
+    return tuple(axis)
+
+
+def _zero1_entry(axes: tuple[str, ...]):
+    """PartitionSpec entry for the ZeRO-1 lead dim (scalar for one axis)."""
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
 def momentum_spec(spec: Optional[P], shape, mesh_axis_sizes: dict[str, int], *,
-                  zero1: bool = False, zero1_axis: str = "data",
+                  zero1: bool = False, zero1_axis: Optional[ZeroAxes] = "data",
                   label: str = "muon") -> P:
     """Optimizer-state PartitionSpec for a param with spec ``spec``.
 
     Mirrors the param's layout; with ``zero1`` the *leading dim* is
-    additionally sharded over ``zero1_axis`` when it is currently unsharded
-    and the axis size divides it. For ``label == "muon"`` leaves only a
-    leading *stack* dim (ndim >= 3) qualifies: the trailing two (matrix)
-    dims define the MuonBP blocks, and splitting them across data ranks
-    would turn zero-collective block steps into gathers. Coordinate-wise
+    additionally sharded over ``zero1_axis`` (a mesh axis name, a tuple of
+    names — e.g. ``('pod', 'data')`` on a hierarchical mesh — or ``None``
+    for the mesh's data axes) when it is currently unsharded and the axis
+    extent divides it. For ``label == "muon"`` leaves only a leading
+    *stack* dim (ndim >= 3) qualifies: the trailing two (matrix) dims
+    define the MuonBP blocks, and splitting them across data ranks would
+    turn zero-collective block steps into gathers. Coordinate-wise
     optimizer state (any other label, e.g. the large embedding/unembedding
     AdamW mu/nu) has no such constraint, so 2-D leaves shard their leading
     dim too.
+
+    Divisibility: the lead dim must divide the ZeRO axes' combined extent.
+    When it doesn't, major (pod-side) axes are dropped one at a time until
+    a dividing suffix remains — a 48-layer stack on a (pod=2, data=16)
+    extent of 32 still shards over ``data`` alone (the flat-mesh
+    behavior) rather than silently replicating. Only when NO suffix
+    divides does this rule no-op; :func:`zero1_flatten_info` prices/plans
+    the flatten-and-shard fallback for that case (padded lead dim, see
+    ``distributed/zero1.py``) — and, when the fallback is enabled, it
+    takes precedence over a partial suffix so the HBM cut spans the full
+    extent.
     """
     entries = list(spec) if spec is not None else []
     entries += [None] * (len(shape) - len(entries))
     min_ndim = 3 if label == "muon" else 2
     if zero1 and len(shape) >= min_ndim and entries[0] is None:
-        d = mesh_axis_sizes.get(zero1_axis, 1)
-        if d > 1 and shape[0] % d == 0:
-            entries[0] = zero1_axis
+        axes = zero1_axes(mesh_axis_sizes, zero1_axis)
+        while axes:
+            d = 1
+            for a in axes:
+                d *= mesh_axis_sizes.get(a, 1)
+            if d > 1 and shape[0] % d == 0:
+                entries[0] = _zero1_entry(axes)
+                break
+            axes = axes[1:]
+    return P(*entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlattenSpec:
+    """ZeRO-1 flatten-and-shard fallback record for one leaf.
+
+    Engages when the lead-dim ZeRO-1 rule no-ops on divisibility (granite:
+    36 layers vs a 16-way data axis). The leaf's momentum is stored with
+    its lead dim ceil-padded to a multiple of the ZeRO axes' extent
+    (``padded_lead``) and sharded over ``axes`` — equivalent to flattening
+    the layer-major element order and sharding at (padded) layer
+    granularity, so each rank's shard is still a whole number of layers
+    and block steps stay shard-local. Pad layers are zero and stay zero
+    (``mu*0 + 0``; a zero matrix orthogonalizes to zero), so numerics are
+    bitwise-identical to unsharded state.
+    """
+
+    axes: tuple[str, ...]   # ZeRO axes, major-to-minor
+    factor: int             # product of the axes' sizes
+    lead: int               # original lead dim
+    padded_lead: int        # ceil(lead / factor) * factor
+
+    @property
+    def pad(self) -> int:
+        return self.padded_lead - self.lead
+
+    def padded_shape(self, shape) -> tuple:
+        return (self.padded_lead, *tuple(shape)[1:])
+
+
+def zero1_flatten_info(spec: Optional[P], shape, mesh_axis_sizes: dict[str, int],
+                       *, zero1_axis: Optional[ZeroAxes] = "data",
+                       label: str = "muon") -> Optional[FlattenSpec]:
+    """The flatten-and-shard fallback, iff the FULL ZeRO extent doesn't fit.
+
+    Returns ``None`` when standard ZeRO-1 already spans the full extent
+    (lead dim divides pod*data), the leaf is not a muon stack (the
+    fallback targets the ``num_layers % data_axis != 0`` case; trailing
+    matrix dims are never split), the lead dim is already sharded, or the
+    ZeRO axes are trivial. Callers that enable the fallback check it
+    BEFORE :func:`momentum_spec` — a padded full-extent sharding beats the
+    partial dividing-suffix fallback momentum_spec would pick.
+    """
+    shape = tuple(shape)
+    if label != "muon" or len(shape) < 3:
+        return None
+    entries = list(spec) if spec is not None else []
+    entries += [None] * (len(shape) - len(entries))
+    if entries[0] is not None:
+        return None
+    axes = zero1_axes(mesh_axis_sizes, zero1_axis)
+    d = 1
+    for a in axes:
+        d *= mesh_axis_sizes.get(a, 1)
+    if d <= 1 or shape[0] % d == 0:
+        return None
+    padded = -(-shape[0] // d) * d
+    return FlattenSpec(axes=axes, factor=d, lead=shape[0], padded_lead=padded)
+
+
+def flatten_momentum_spec(spec: Optional[P], shape,
+                          info: FlattenSpec) -> P:
+    """Momentum PartitionSpec for a flatten-fallback leaf (padded shape)."""
+    entries = list(spec) if spec is not None else []
+    entries += [None] * (len(tuple(shape)) - len(entries))
+    entries[0] = _zero1_entry(info.axes)
     return P(*entries)
 
 

@@ -76,9 +76,8 @@ def test_train_step_accum_runs(key):
 
 
 def test_layer_shard_full_ns_single_device_math(key):
-    """The layer_shard program CommOp (the folded-in distribute_full) on a
-    1-device mesh must equal the plain full step (padding + resharding are
-    numerically inert)."""
+    """The layer_shard program CommOp on a 1-device mesh must equal the
+    plain full step (padding + resharding are numerically inert)."""
     mesh = jax.make_mesh((1,), ("data",))
     g = jax.random.normal(key, (3, 16, 24))  # stacked "layers"
     plain = muon_full(0.1, rms_match=False)

@@ -121,8 +121,7 @@ def test_program_matches_seed_per_leaf(phase, dtype, bucketing):
 
 @pytest.mark.parametrize("phase", ["block", "full"])
 def test_layer_shard_program_matches_seed(phase, key):
-    """The folded distribute_full (layer_shard CommOp) changes placement,
-    never numerics."""
+    """The layer_shard CommOp changes placement, never numerics."""
     mesh = jax.make_mesh((1,), ("data",))
     params, grads, blocks = make_tree(jnp.float32)
     opt = muon(LR, momentum=MU, weight_decay=WD, block_specs=blocks,
