@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Chaos harness: train under a deterministic fault plan and prove recovery.
+
+Launches ``repro.launch.train`` as a subprocess with ``--fault-plan``,
+watches it get SIGKILLed (by the plan's ``kill_in_save@K`` faults, fired
+from inside ``checkpoint.save``), relaunches with ``--resume`` until the run
+completes, then asserts the whole trajectory is sane:
+
+* every relaunch actually resumed from a snapshot (not step 0),
+* the logged steps cover the run contiguously across launches,
+* the final step is ``steps - 1`` and its loss is finite,
+* with ``--guard``, the cumulative skip counter matches the number of
+  injected grad faults (each NaN/Inf/spike was skipped, none leaked).
+
+Exit 0 only when every assertion holds — this is the CI preemption smoke.
+
+Example (what scripts/ci.sh runs):
+  PYTHONPATH=src python scripts/chaos_run.py \
+      --plan 'nan_grads@3,kill_in_save@5' --max-restarts 3 -- \
+      --arch granite-8b --reduced --steps 10 --batch 2 --seq 32 \
+      --period 3 --guard --checkpoint-every 2 --checkpoint-dir /tmp/chaos \
+      --log-every 1
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.training.faults import FaultPlan  # noqa: E402
+
+
+def run_once(cmd: list[str]) -> tuple[int, list[dict]]:
+    """Run one launch; returns (returncode, parsed json log records)."""
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                            text=True)
+    recs = []
+    for line in proc.stdout:
+        line = line.rstrip()
+        print(line, flush=True)
+        if line.startswith("{"):
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    proc.wait()
+    return proc.returncode, recs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--plan", default=None,
+                    help="fault spec for the FIRST launch (kill faults are "
+                         "stripped on restarts so replayed saves don't "
+                         "crash-loop; grad faults replay deterministically)")
+    ap.add_argument("--max-restarts", type=int, default=5)
+    ap.add_argument("train_args", nargs=argparse.REMAINDER,
+                    help="arguments after '--' go to repro.launch.train")
+    args = ap.parse_args()
+    train_args = [a for a in args.train_args if a != "--"]
+    if "--steps" not in train_args:
+        print("chaos_run: pass --steps in the train args", file=sys.stderr)
+        return 2
+    steps = int(train_args[train_args.index("--steps") + 1])
+    guarded = "--guard" in train_args
+
+    plan = FaultPlan.parse(args.plan) if args.plan else None
+    base = [sys.executable, "-m", "repro.launch.train"] + train_args
+
+    launches: list[list[dict]] = []
+    restarts = 0
+    cmd = base + (["--fault-plan", plan.spec()] if plan else [])
+    while True:
+        rc, recs = run_once(cmd)
+        launches.append(recs)
+        if rc == 0:
+            break
+        kind = "killed" if rc < 0 or rc == 137 else f"exit {rc}"
+        restarts += 1
+        if restarts > args.max_restarts:
+            print(f"chaos_run: FAIL — {kind}, restart budget exhausted "
+                  f"({args.max_restarts})", file=sys.stderr)
+            return 1
+        print(f"chaos_run: launch died ({kind}); restart {restarts} with "
+              f"--resume", flush=True)
+        replay = plan.without_kills() if plan else None
+        cmd = base + ["--resume"] + (
+            ["--fault-plan", replay.spec()] if replay and replay.faults else [])
+
+    # ---- trajectory assertions ------------------------------------------
+    failures = []
+    step_recs = [r for recs in launches for r in recs if "loss" in r]
+    if not step_recs or step_recs[-1]["step"] != steps - 1:
+        failures.append(f"final logged step is not {steps - 1}: "
+                        f"{step_recs[-1]['step'] if step_recs else None}")
+    else:
+        import math
+
+        if not math.isfinite(step_recs[-1]["loss"]):
+            failures.append(f"final loss not finite: {step_recs[-1]['loss']}")
+    for i, recs in enumerate(launches[1:], start=1):
+        resume = next((r for r in recs if r.get("event") == "resume"), None)
+        if resume is None:
+            failures.append(f"launch {i} logged no resume event")
+        elif resume["step"] == 0 or resume.get("snapshot") is None:
+            failures.append(f"launch {i} restarted from scratch instead of "
+                            f"resuming: {resume}")
+    # Contiguity: each launch must continue at or before the previous
+    # launch's next step (replay from an older snapshot is fine, a gap is
+    # data loss).
+    prev_last = None
+    for i, recs in enumerate(launches):
+        launch_steps = [r["step"] for r in recs if "loss" in r]
+        if not launch_steps:
+            continue
+        if prev_last is not None and launch_steps[0] > prev_last + 1:
+            failures.append(f"launch {i} starts at step {launch_steps[0]}, "
+                            f"gap after {prev_last}")
+        prev_last = launch_steps[-1]
+    if plan and guarded:
+        grad_faults = [f for f in plan.faults if f.kind != "kill_in_save"
+                       and f.kind != "kill_mid_save"]
+        want = len(grad_faults)
+        got = max((r.get("skipped", 0) for recs in launches for r in recs
+                   if "loss" in r), default=0)
+        if got < want:
+            failures.append(f"guard skipped {got} steps, plan injected {want} "
+                            f"grad faults — a fault leaked into the update")
+
+    if failures:
+        for f in failures:
+            print(f"chaos_run: FAIL — {f}", file=sys.stderr)
+        return 1
+    print(f"chaos_run: OK — {steps} steps, {restarts} restart(s), "
+          f"recovery verified")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -72,6 +72,22 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m repro.launch.dryrun
     --arch muonbp-960m --shape train_smoke --mesh pod=2,data=2,model=2 \
     --reduced --no-calibrate --force
 
+echo "== resilience: guarded-step parity + SIGKILL-durability (slow tests) =="
+# 8-device guarded-vs-unguarded bitwise parity + guarded block-step HLO
+# audit, SIGKILL-inside-save atomicity, and the launcher-level kill/resume
+# drill (tests/test_checkpoint_durability.py::test_train_kill_then_resume).
+python -m pytest -q tests/test_resilience.py tests/test_checkpoint_durability.py -m slow
+
+echo "== resilience: preemption + guarded-NaN chaos drill =="
+# NaN gradients at step 3 plus a SIGKILL inside checkpoint.save at step >=5:
+# chaos_run relaunches with --resume and exits 0 only if all 10 steps
+# completed, the relaunch resumed from a real snapshot with no step gap,
+# and the guard skipped the injected fault instead of applying it.
+rm -rf /tmp/repro_chaos
+python scripts/chaos_run.py --plan 'nan_grads@3,kill_in_save@5' --max-restarts 3 -- \
+    --arch granite-8b --reduced --steps 10 --batch 2 --seq 32 --period 3 \
+    --guard --checkpoint-every 2 --checkpoint-dir /tmp/repro_chaos --log-every 1
+
 echo "== docs flag coverage =="
 # Every train.py/perf.py/dryrun.py CLI flag must appear in the operator guide.
 python scripts/check_docs.py

@@ -47,6 +47,16 @@ class SyntheticLM:
         self.trans_p = raw / raw.sum(axis=1, keepdims=True)
         self.rng = np.random.default_rng(seed + 1)
 
+    def state(self) -> dict:
+        """JSON-serializable stream position (numpy bit-generator state).
+
+        Persisted in checkpoint ``meta.json`` so a resumed run continues
+        the token stream where it left off instead of replaying it."""
+        return {"rng": self.rng.bit_generator.state}
+
+    def set_state(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+
     def _sample_rows(self, n: int) -> np.ndarray:
         vocab = self.cfg.vocab_size
         out = np.empty((n, self.seq_len + 1), np.int32)
@@ -88,6 +98,13 @@ class MemmapDataset:
         self.batch = batch
         self.seq_len = seq_len
         self.rng = np.random.default_rng(seed)
+
+    def state(self) -> dict:
+        """JSON-serializable stream position — see ``SyntheticLM.state``."""
+        return {"rng": self.rng.bit_generator.state}
+
+    def set_state(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
 
     def __iter__(self) -> Iterator[dict]:
         n = len(self.data) - self.seq_len - 1

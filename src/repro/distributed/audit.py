@@ -366,6 +366,59 @@ def audit_optimizer(optimizer, a_params: Any, a_opt: Any, *, phase: str,
     return audit_compiled(compiled)
 
 
+def audit_guarded_optimizer(optimizer, guard_cfg, a_params: Any, a_opt: Any, *,
+                            phase: str, a_grads: Any = None,
+                            update_shardings: Any = None) -> AuditResult:
+    """Audit the resilience-GUARDED optimizer apply compiled in isolation.
+
+    Same contract as :func:`audit_optimizer`, but the compiled function is
+    the guarded step's tail — the health predicate (a scalar reduction over
+    loss and the gradient square-norm) plus the ``lax.cond`` around
+    ``optimizer.update`` + apply (``repro.training.resilience``). The guard
+    must not change the phase's collective schedule: block steps stay at
+    zero optimizer collectives (the predicate's scalar all-reduce fits in
+    ``assert_matches_plan``'s ``abs_slack``), full steps keep their
+    plan-matching gathers. Outputs are pinned exactly as in
+    :func:`audit_optimizer` so resharding artifacts don't pollute the
+    measurement.
+    """
+    from repro.training import resilience
+
+    if a_grads is None:
+        a_grads = a_params
+    leaf = jax.tree.leaves(a_params)[0]
+    mesh = leaf.sharding.mesh
+    scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    a_loss = jax.ShapeDtypeStruct((), jax.numpy.float32, sharding=scalar)
+    a_guard = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=scalar),
+        resilience.init_guard_state(),
+    )
+
+    def apply(grads, state, params, loss, gstate):
+        gsq = sum(
+            jax.numpy.sum(jax.numpy.square(g.astype(jax.numpy.float32)))
+            for g in jax.tree.leaves(grads)
+        )
+        new_params, new_opt, _, _ = resilience.guarded_update(
+            optimizer, guard_cfg, grads, state, params, gstate, loss, gsq, phase
+        )
+        return new_params, new_opt
+
+    if update_shardings is None:
+        update_shardings = jax.tree.map(lambda x: x.sharding, a_params)
+    out_shardings = (
+        update_shardings,
+        jax.tree.map(lambda x: x.sharding, a_opt),
+    )
+    compiled = (
+        jax.jit(apply, out_shardings=out_shardings)
+        .lower(a_grads, a_opt, a_params, a_loss, a_guard)
+        .compile()
+    )
+    return audit_compiled(compiled)
+
+
 def assert_matches_plan(result: AuditResult, plan: CommPlan, phase: str, *,
                         rel_tol: float = 0.05, abs_slack: int = 4096,
                         ops: tuple = ("all-gather", "reduce-scatter", "all-to-all")) -> None:

@@ -10,6 +10,16 @@ A/Bs). ``--zero1`` shards optimizer state over the mesh's data axes
 (``('pod', 'data')`` on a hierarchical mesh); ``--zero1-flatten`` adds the
 flatten-and-shard fallback for layer counts that don't divide them.
 
+Resilience: ``--guard`` wraps the optimizer apply in the in-graph health
+check (skip on NaN/Inf or loss spike) and drives the escalation ladder from
+here — skip -> force an early 'full'-phase step (both phase functions are
+already compiled, so that is a dispatch decision) -> LR backoff ->
+checkpoint-and-abort. ``--checkpoint-every`` writes atomic, checksummed
+snapshots (always including the final step) and ``--resume`` auto-resumes
+from the newest *valid* one, including optimizer shards, the data-stream
+position, and the guard counters. ``--fault-plan`` injects deterministic
+faults for chaos testing (scripts/chaos_run.py).
+
 See docs/operators-guide.md for flag-by-flag guidance.
 
 Example (CPU-scale):
@@ -23,6 +33,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import sys
 import time
 
 import jax
@@ -38,7 +49,8 @@ from repro.data.pipeline import SyntheticLM
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import init_params
 from repro.sharding import specs as sh
-from repro.training import checkpoint
+from repro.training import checkpoint, resilience
+from repro.training import faults as faults_lib
 from repro.training.train_step import init_train_state, make_train_step_fns
 
 
@@ -122,6 +134,42 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--keep-checkpoints", type=int, default=3,
+                    help="snapshot retention: keep the newest k step_* dirs "
+                         "under --checkpoint-dir")
+    ap.add_argument("--resume", action="store_true",
+                    help="auto-resume from the newest VALID snapshot under "
+                         "--checkpoint-dir (corrupt ones are skipped; run "
+                         "metadata is verified); starts fresh when none "
+                         "exists")
+    ap.add_argument("--guard", action="store_true",
+                    help="guarded train step: in-graph health check "
+                         "(all-finite loss/grads + EMA loss-spike detector) "
+                         "skips unstable updates and drives the escalation "
+                         "ladder (skip -> forced full step -> LR backoff -> "
+                         "checkpoint-and-abort)")
+    ap.add_argument("--guard-spike-factor", type=float, default=3.0,
+                    help="skip the step when loss > factor * EMA(loss)")
+    ap.add_argument("--guard-ema-beta", type=float, default=0.98,
+                    help="EMA decay of the loss-spike detector")
+    ap.add_argument("--guard-warmup", type=int, default=10,
+                    help="healthy steps before spike detection engages")
+    ap.add_argument("--guard-force-full-after", type=int, default=1,
+                    help="consecutive skips before forcing an early "
+                         "'full'-phase step (the paper's stabilizer); 0 "
+                         "disables the rung")
+    ap.add_argument("--guard-backoff-after", type=int, default=3,
+                    help="consecutive skips before LR backoff; 0 disables")
+    ap.add_argument("--guard-backoff-factor", type=float, default=0.5,
+                    help="multiplier applied to the guard lr_scale per "
+                         "backoff")
+    ap.add_argument("--guard-abort-after", type=int, default=6,
+                    help="consecutive skips before checkpoint-and-abort "
+                         "(exit 3); 0 disables")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault injection spec, e.g. "
+                         "'nan_grads@7,spike_loss@9x8,kill_in_save@12' "
+                         "(repro.training.faults; chaos testing only)")
     ap.add_argument("--log-file", default=None)
     args = ap.parse_args()
 
@@ -170,34 +218,154 @@ def main():
         engine=engine, comm=comm,
     )
 
-    state = init_train_state(params, optimizer)
+    guard_cfg = (
+        resilience.GuardConfig(
+            spike_factor=args.guard_spike_factor,
+            ema_beta=args.guard_ema_beta,
+            warmup_steps=args.guard_warmup,
+        )
+        if args.guard else None
+    )
+    state = init_train_state(params, optimizer, guard=args.guard)
     opt_shardings = None
     if args.zero1:
         state = state._replace(opt_state=zero1_lib.shard_state(
             state.opt_state, params, mesh, pspecs=pspecs))
         opt_shardings = zero1_lib.opt_shardings(
             state.opt_state, params, mesh, pspecs=pspecs, zero1=True)
-    fns = make_train_step_fns(cfg, optimizer, ctx, opt_shardings=opt_shardings)
-    pipe = iter(SyntheticLM(cfg, args.batch, args.seq, seed=args.seed))
+    fns = make_train_step_fns(cfg, optimizer, ctx, opt_shardings=opt_shardings,
+                              guard=guard_cfg)
+    pipe_src = SyntheticLM(cfg, args.batch, args.seq, seed=args.seed)
+    pipe = iter(pipe_src)
+
+    plan = faults_lib.FaultPlan.parse(args.fault_plan) if args.fault_plan else None
+    if plan:
+        faults_lib.set_active(plan)
+    fault_fns: dict = {}
+
+    def step_fn(phase, fault):
+        """Clean steps use the pre-built fns; a scheduled in-graph fault
+        dispatches a separately-compiled variant (built lazily, never
+        touching the clean functions)."""
+        if fault is None:
+            return fns[phase]
+        key = (phase, fault)
+        if key not in fault_fns:
+            fault_fns[key] = make_train_step_fns(
+                cfg, optimizer, ctx, opt_shardings=opt_shardings,
+                guard=guard_cfg, fault=fault)[phase]
+        return fault_fns[key]
+
+    # Run metadata: verified on resume so a wrong-arch/optimizer/mesh resume
+    # fails with a named mismatch instead of a shape error.
+    run_meta = {
+        "arch": cfg.name,
+        "optimizer": args.optimizer,
+        "period": period,
+        "mesh": {k: int(v) for k, v in zip(mesh.axis_names, mesh.devices.shape)},
+        "zero1": bool(args.zero1),
+        "seed": args.seed,
+    }
+
+    def save_ckpt(step):
+        extra = {
+            "run": run_meta,
+            "args": vars(args),
+            "data_state": pipe_src.state(),
+            "guard": resilience.guard_to_meta(state.guard),
+        }
+        path = checkpoint.save_snapshot(
+            args.checkpoint_dir, state.params, state.opt_state, step=step,
+            extra=extra, keep=args.keep_checkpoints)
+        print(json.dumps({"event": "checkpoint", "step": step, "path": path}),
+              flush=True)
+
+    start_step = 0
+    if args.resume:
+        found = checkpoint.latest_valid(
+            args.checkpoint_dir, expect_run=run_meta,
+            on_skip=lambda p, why: print(json.dumps(
+                {"event": "skip_snapshot", "path": p, "why": why}), flush=True))
+        if found is not None:
+            ck_path, meta = found
+            r_params, r_opt, saved_step = checkpoint.restore(
+                ck_path, state.params, state.opt_state,
+                shardings=sh.named(mesh, pspecs), opt_shardings=opt_shardings,
+                verify_checksums=False)  # latest_valid already verified
+            state = state._replace(
+                params=r_params, opt_state=r_opt,
+                step=jnp.asarray(saved_step + 1, jnp.int32),
+                guard=(resilience.guard_from_meta(meta.get("guard"))
+                       if args.guard else None))
+            if meta.get("data_state"):
+                pipe_src.set_state(meta["data_state"])
+            start_step = saved_step + 1
+            print(json.dumps({"event": "resume", "step": start_step,
+                              "snapshot": ck_path}), flush=True)
+        else:
+            print(json.dumps({"event": "resume", "step": 0,
+                              "snapshot": None}), flush=True)
 
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M optimizer={args.optimizer} "
           f"period={period} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
+    escalator = (
+        resilience.Escalator(resilience.EscalationPolicy(
+            force_full_after=args.guard_force_full_after,
+            backoff_after=args.guard_backoff_after,
+            backoff_factor=args.guard_backoff_factor,
+            abort_after=args.guard_abort_after,
+        ))
+        if args.guard else None
+    )
+    if escalator is not None and start_step:
+        # The cumulative skip counter survives the resume; don't re-escalate
+        # on skips that happened before the preemption.
+        escalator._last_total = int(state.guard.skipped)
+
     log = []
     t0 = time.time()
-    for step in range(args.steps):
+    forced_full = False
+    for step in range(start_step, args.steps):
         batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
         phase = phase_for_step(step, period) if args.optimizer != "adamw" else "block"
-        state, metrics = fns[phase](state, batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
+        if forced_full and args.optimizer != "adamw":
+            phase = "full"
+        forced_full = False
+        fault = plan.grad_fault(step) if plan else None
+        state, metrics = step_fn(phase, fault)(state, batch)
+        action = "none"
+        skipped = healthy = None
+        if escalator is not None:
+            skipped = int(metrics["skipped"])
+            healthy = int(metrics["healthy"])
+            action = escalator.observe(step, skipped)
+            if action == "force_full":
+                forced_full = True
+            elif action == "backoff":
+                state = resilience.apply_backoff(state, args.guard_backoff_factor)
+        if (step % args.log_every == 0 or step == args.steps - 1
+                or (healthy is not None and not healthy)):
             loss = float(metrics["loss"])
             rec = {"step": step, "loss": round(loss, 4), "phase": phase,
                    "wall_s": round(time.time() - t0, 1)}
+            if escalator is not None:
+                rec.update(healthy=healthy, skipped=skipped,
+                           escalation=action,
+                           lr_scale=round(float(metrics["lr_scale"]), 4))
             log.append(rec)
             print(json.dumps(rec), flush=True)
-        if args.checkpoint_every and step and step % args.checkpoint_every == 0:
-            checkpoint.save(args.checkpoint_dir, state.params, state.opt_state, step)
+        if args.checkpoint_every and (
+                (step and step % args.checkpoint_every == 0)
+                or step == args.steps - 1):
+            save_ckpt(step)
+        if action == "abort":
+            save_ckpt(step)
+            print(json.dumps({"event": "abort", "step": step,
+                              "consecutive_skips": escalator.consecutive}),
+                  flush=True)
+            sys.exit(3)
     if args.log_file:
         with open(args.log_file, "w") as f:
             json.dump({"args": vars(args), "log": log}, f, indent=1)

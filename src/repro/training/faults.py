@@ -1,0 +1,213 @@
+"""Deterministic fault injection for resilience testing.
+
+Every recovery path in ``resilience``/``checkpoint`` is exercised, not
+assumed: a :class:`FaultPlan` names exactly which fault fires at which step,
+so tests and the chaos harness (``scripts/chaos_run.py``) can replay the
+same disaster and compare against a clean run.
+
+Fault kinds:
+
+* ``nan_grads@K`` / ``inf_grads@K`` — in-graph: every gradient leaf becomes
+  NaN/Inf at step K (the compiled step variant is built lazily by the
+  launcher; the clean step function is untouched).
+* ``spike_loss@KxF`` — in-graph: the loss is multiplied by F at step K
+  (trips the guard's EMA spike detector without any non-finite values).
+* ``kill_in_save@K`` — process-level: SIGKILL the process from inside
+  ``checkpoint.save`` at the first save with ``step >= K``, *after* the
+  snapshot's tmp dir is fully written but *before* the atomic rename —
+  the window a non-atomic writer corrupts.
+* ``kill_mid_save@K`` — same, but between the array-file writes, leaving a
+  torn tmp dir (which restore must never pick up).
+
+File-corruption helpers (:func:`truncate_file`, :func:`bitflip_file`)
+simulate disk-level damage to existing snapshots; the checkpoint layer's
+CRC manifest must reject both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GRAD_KINDS = ("nan_grads", "inf_grads", "spike_loss")
+KILL_KINDS = ("kill_in_save", "kill_mid_save")
+KINDS = GRAD_KINDS + KILL_KINDS
+
+# checkpoint.save crash points, in write order
+_KILL_POINT = {
+    "kill_mid_save": "checkpoint.mid_write",
+    "kill_in_save": "checkpoint.pre_finalize",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    kind: str
+    step: int
+    scale: float = 8.0  # spike_loss multiplier
+
+    def spec(self) -> str:
+        if self.kind == "spike_loss":
+            return f"{self.kind}@{self.step}x{self.scale:g}"
+        return f"{self.kind}@{self.step}"
+
+
+class FaultPlan:
+    """Parsed, deterministic schedule of faults.
+
+    Spec grammar: comma-separated ``kind@step`` items, with an optional
+    ``xSCALE`` suffix for ``spike_loss`` — e.g.
+    ``"nan_grads@7,spike_loss@9x8,kill_in_save@12"``.
+    """
+
+    def __init__(self, faults):
+        self.faults = tuple(faults)
+        for f in self.faults:
+            if f.kind not in KINDS:
+                raise ValueError(f"unknown fault kind {f.kind!r} (known: {KINDS})")
+        # kill faults fire once per process: on the first save whose step
+        # reaches them (saves are periodic, so an exact step match would
+        # silently never fire).
+        self._fired: set[Fault] = set()
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        faults = []
+        for item in spec.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            try:
+                kind, rest = item.split("@", 1)
+                scale = 8.0
+                if "x" in rest:
+                    rest, s = rest.split("x", 1)
+                    scale = float(s)
+                faults.append(Fault(kind=kind, step=int(rest), scale=scale))
+            except ValueError as e:
+                raise ValueError(
+                    f"bad fault spec item {item!r} (want kind@step[xSCALE]): {e}"
+                ) from None
+        return cls(faults)
+
+    def spec(self) -> str:
+        return ",".join(f.spec() for f in self.faults)
+
+    def grad_fault(self, step: int) -> Optional[Fault]:
+        """The in-graph fault scheduled for this step, if any."""
+        for f in self.faults:
+            if f.kind in GRAD_KINDS and f.step == step:
+                return f
+        return None
+
+    def without_kills(self) -> "FaultPlan":
+        """The plan a restarted process should run under: replayed steps
+        re-inject grad faults deterministically, but re-arming a kill at a
+        step the resumed run will pass again would crash-loop forever."""
+        return FaultPlan(f for f in self.faults if f.kind not in KILL_KINDS)
+
+    def take_kill(self, point: str, step: Optional[int]) -> bool:
+        """True exactly once per armed kill fault matching this crash point."""
+        if step is None:
+            return False
+        for f in self.faults:
+            if (f.kind in KILL_KINDS and _KILL_POINT[f.kind] == point
+                    and step >= f.step and f not in self._fired):
+                self._fired.add(f)
+                return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Process-global active plan + crash points
+# ---------------------------------------------------------------------------
+
+_active: Optional[FaultPlan] = None
+
+
+def set_active(plan: Optional[FaultPlan]) -> None:
+    global _active
+    _active = plan
+
+
+def active() -> Optional[FaultPlan]:
+    return _active
+
+
+def crash_point(point: str, step: Optional[int] = None) -> None:
+    """Called from ``checkpoint.save`` at its crash-injection points.
+
+    SIGKILLs the current process — no atexit, no cleanup, exactly what a
+    preemption looks like — when either the active :class:`FaultPlan` or
+    the ``REPRO_KILL_IN_SAVE`` / ``REPRO_KILL_MID_SAVE`` env vars (a step
+    threshold; crosses the subprocess boundary without a flag) arm it.
+    """
+    kill = _active is not None and _active.take_kill(point, step)
+    env = {
+        "checkpoint.pre_finalize": os.environ.get("REPRO_KILL_IN_SAVE"),
+        "checkpoint.mid_write": os.environ.get("REPRO_KILL_MID_SAVE"),
+    }.get(point)
+    if env is not None and step is not None and step >= int(env):
+        kill = True
+    if kill:
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+# ---------------------------------------------------------------------------
+# In-graph injection (static per compiled step variant)
+# ---------------------------------------------------------------------------
+
+def inject(fault: Fault, loss, grads, metrics):
+    """Apply an in-graph fault to (loss, grads, metrics).
+
+    Static: the launcher compiles a separate step variant per (phase, fault)
+    so the clean step function's numerics and HLO are untouched.
+    """
+    if fault.kind == "nan_grads":
+        grads = jax.tree.map(lambda g: jnp.full_like(g, jnp.nan), grads)
+    elif fault.kind == "inf_grads":
+        grads = jax.tree.map(lambda g: jnp.full_like(g, jnp.inf), grads)
+    elif fault.kind == "spike_loss":
+        loss = loss * jnp.float32(fault.scale)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+    else:
+        raise ValueError(f"{fault.kind!r} is not an in-graph fault")
+    return loss, grads, metrics
+
+
+# ---------------------------------------------------------------------------
+# On-disk corruption (simulated disk damage to an existing snapshot)
+# ---------------------------------------------------------------------------
+
+def truncate_file(path: str, keep_fraction: float = 0.5) -> int:
+    """Truncate ``path`` to a fraction of its size; returns the new size."""
+    size = os.path.getsize(path)
+    keep = int(size * keep_fraction)
+    with open(path, "r+b") as f:
+        f.truncate(keep)
+    return keep
+
+
+def bitflip_file(path: str, *, offset: Optional[int] = None, seed: int = 0) -> int:
+    """Flip one bit of ``path`` (deterministic under ``seed``); returns the
+    byte offset flipped. Defaults to a byte in the middle half of the file
+    so it lands in array data rather than container headers — though the
+    checksum layer must reject either."""
+    size = os.path.getsize(path)
+    rng = np.random.default_rng(seed)
+    if offset is None:
+        offset = int(rng.integers(size // 4, max(size // 4 + 1, 3 * size // 4)))
+    bit = int(rng.integers(0, 8))
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        byte = f.read(1)[0]
+        f.seek(offset)
+        f.write(bytes([byte ^ (1 << bit)]))
+    return offset

@@ -1,0 +1,221 @@
+"""Guarded training steps + host-side escalation ladder (fault tolerance).
+
+The paper's stability story (periodic full orthogonalization) assumes the
+step stream itself is healthy; at production scale it isn't — a single NaN
+gradient propagates into momentum forever, and a transient loss blow-up
+poisons hundreds of subsequent steps. This module adds the detection and
+reaction layer:
+
+* **In-graph guard** (:func:`guarded_update`): a health predicate — global
+  all-finite over loss and the gradient square-norm, plus an EMA loss-spike
+  detector carried in :class:`GuardState` — wrapped around the optimizer
+  apply with ``lax.cond``. Healthy steps execute exactly the unguarded
+  update (bitwise-identical: the true branch is the same computation, and
+  the escalation ``lr_scale`` multiplier is exact at 1.0); unhealthy steps
+  take the identity branch — params and momentum untouched, skip counter
+  bumped. The predicate is a scalar derived from already-globally-reduced
+  loss/grads, so every device agrees on the branch and the block step's
+  zero-optimizer-collective property survives (audited by
+  ``distributed.audit.audit_guarded_optimizer``).
+
+* **Host-side escalation ladder** (:class:`Escalator`): the launcher reads
+  the cumulative skip counter each step and walks skip -> force an early
+  'full'-phase step at the next dispatch (the paper's own stabilizer — both
+  phase functions are already compiled, so this is a dispatch decision, not
+  a retrace) -> LR backoff (``GuardState.lr_scale``, folded into the update
+  inside the compiled step) -> checkpoint-and-abort.
+
+Fault injection for exercising all of this lives in
+``repro.training.faults``; durable checkpoints in
+``repro.training.checkpoint``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class GuardState(NamedTuple):
+    """Device-side guard state, carried in ``TrainState.guard``."""
+
+    ema_loss: jax.Array   # f32 biased EMA of healthy-step losses
+    ema_count: jax.Array  # i32 healthy steps folded into the EMA
+    skipped: jax.Array    # i32 cumulative skipped (unhealthy) steps
+    lr_scale: jax.Array   # f32 escalation multiplier on the update (1.0 = off)
+
+
+def init_guard_state() -> GuardState:
+    return GuardState(
+        ema_loss=jnp.zeros((), jnp.float32),
+        ema_count=jnp.zeros((), jnp.int32),
+        skipped=jnp.zeros((), jnp.int32),
+        lr_scale=jnp.ones((), jnp.float32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Static health-check configuration (baked into the compiled step)."""
+
+    spike_factor: float = 3.0   # unhealthy if loss > spike_factor * EMA(loss)
+    ema_beta: float = 0.98
+    warmup_steps: int = 10      # spike detection off until the EMA has this many samples
+
+
+def debiased_ema(cfg: GuardConfig, gstate: GuardState) -> jax.Array:
+    """Bias-corrected EMA loss (Adam-style ``ema / (1 - beta^t)``)."""
+    beta = jnp.float32(cfg.ema_beta)
+    t = jnp.maximum(gstate.ema_count, 1).astype(jnp.float32)
+    return gstate.ema_loss / (1.0 - beta ** t)
+
+
+def health_check(cfg: GuardConfig, loss: jax.Array, grad_sq_norm: jax.Array,
+                 gstate: GuardState) -> jax.Array:
+    """Scalar bool: is this step safe to apply?
+
+    ``grad_sq_norm`` is the fp32 sum of squares over every gradient leaf —
+    non-finite iff any gradient element is non-finite (or the norm itself
+    overflowed, which the guard also treats as unstable). The spike check
+    only engages once the EMA has ``warmup_steps`` healthy samples.
+    """
+    finite = jnp.isfinite(loss) & jnp.isfinite(grad_sq_norm)
+    warm = gstate.ema_count >= cfg.warmup_steps
+    spike = warm & (loss > jnp.float32(cfg.spike_factor) * debiased_ema(cfg, gstate))
+    return finite & ~spike
+
+
+def fold_observation(cfg: GuardConfig, gstate: GuardState, loss: jax.Array,
+                     healthy: jax.Array) -> GuardState:
+    """Advance the guard state: EMA folds healthy losses only (a spike or a
+    NaN must not poison the detector's baseline), skips count the rest."""
+    beta = jnp.float32(cfg.ema_beta)
+    h = healthy.astype(jnp.int32)
+    new_ema = jnp.where(
+        healthy, beta * gstate.ema_loss + (1.0 - beta) * loss, gstate.ema_loss
+    )
+    return GuardState(
+        ema_loss=new_ema,
+        ema_count=gstate.ema_count + h,
+        skipped=gstate.skipped + (1 - h),
+        lr_scale=gstate.lr_scale,
+    )
+
+
+def guarded_update(optimizer, cfg: GuardConfig, grads, opt_state, params,
+                   gstate: GuardState, loss: jax.Array, grad_sq_norm: jax.Array,
+                   phase: str):
+    """``lax.cond``-guarded optimizer apply.
+
+    Returns ``(new_params, new_opt_state, new_guard_state, healthy)``.
+    The healthy branch runs ``optimizer.update`` + ``params + updates``
+    exactly as the unguarded step does (times ``lr_scale``, exact for 1.0);
+    the unhealthy branch returns params and optimizer state untouched —
+    momentum is NOT advanced past a corrupt gradient.
+    """
+    from repro.core.combine import apply_updates
+
+    healthy = health_check(cfg, loss, grad_sq_norm, gstate)
+
+    def _apply():
+        updates, new_opt = optimizer.update(grads, opt_state, params, phase)
+        scale = gstate.lr_scale
+        updates = jax.tree.map(lambda u: scale.astype(u.dtype) * u, updates)
+        return apply_updates(params, updates), new_opt
+
+    def _skip():
+        return params, opt_state
+
+    new_params, new_opt_state = jax.lax.cond(healthy, _apply, _skip)
+    return new_params, new_opt_state, fold_observation(cfg, gstate, loss, healthy), healthy
+
+
+# ---------------------------------------------------------------------------
+# Host-side escalation ladder
+# ---------------------------------------------------------------------------
+
+ACTIONS = ("none", "force_full", "backoff", "abort")
+
+
+@dataclasses.dataclass(frozen=True)
+class EscalationPolicy:
+    """Thresholds on *consecutive* skipped steps. Each rung fires while the
+    streak sits in its band; a healthy step resets the streak. 0 disables a
+    rung."""
+
+    force_full_after: int = 1   # dispatch an early 'full' phase step
+    backoff_after: int = 3      # multiply GuardState.lr_scale by backoff_factor
+    backoff_factor: float = 0.5
+    abort_after: int = 6        # checkpoint and exit non-zero
+
+
+class Escalator:
+    """Walks the ladder from the cumulative in-graph skip counter.
+
+    The launcher calls :meth:`observe` once per step with
+    ``int(metrics['skipped'])``; the returned action is one of
+    :data:`ACTIONS`. State is purely host-side (no retraces).
+    """
+
+    def __init__(self, policy: EscalationPolicy = EscalationPolicy()):
+        self.policy = policy
+        self.consecutive = 0
+        self._last_total = 0
+        self.history: list[tuple[int, str]] = []  # (step, action)
+
+    def observe(self, step: int, skipped_total: int) -> str:
+        delta = skipped_total - self._last_total
+        self._last_total = skipped_total
+        if delta <= 0:
+            self.consecutive = 0
+            return "none"
+        self.consecutive += delta
+        p = self.policy
+        if p.abort_after and self.consecutive >= p.abort_after:
+            action = "abort"
+        elif p.backoff_after and self.consecutive >= p.backoff_after:
+            action = "backoff"
+        elif p.force_full_after and self.consecutive >= p.force_full_after:
+            action = "force_full"
+        else:
+            action = "none"
+        if action != "none":
+            self.history.append((step, action))
+        return action
+
+
+def apply_backoff(state, factor: float):
+    """LR backoff rung: scale the guard's update multiplier (host-side; the
+    compiled step reads ``lr_scale`` from state, so no retrace)."""
+    g = state.guard
+    return state._replace(guard=g._replace(lr_scale=g.lr_scale * jnp.float32(factor)))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint (de)serialization of the guard state
+# ---------------------------------------------------------------------------
+
+def guard_to_meta(gstate: Optional[GuardState]) -> Optional[dict]:
+    """JSON-safe snapshot of the guard state for checkpoint ``meta.json``."""
+    if gstate is None:
+        return None
+    return {
+        "ema_loss": float(gstate.ema_loss),
+        "ema_count": int(gstate.ema_count),
+        "skipped": int(gstate.skipped),
+        "lr_scale": float(gstate.lr_scale),
+    }
+
+
+def guard_from_meta(meta: Optional[dict]) -> GuardState:
+    if not meta:
+        return init_guard_state()
+    return GuardState(
+        ema_loss=jnp.float32(meta.get("ema_loss", 0.0)),
+        ema_count=jnp.int32(meta.get("ema_count", 0)),
+        skipped=jnp.int32(meta.get("skipped", 0)),
+        lr_scale=jnp.float32(meta.get("lr_scale", 1.0)),
+    )

@@ -32,13 +32,20 @@ class TrainState(NamedTuple):
     params: Any
     opt_state: Any
     step: jax.Array
+    # GuardState when the guarded step is enabled (repro.training.resilience),
+    # None otherwise — a None leaf is an empty subtree, so unguarded code
+    # paths and checkpoints are unchanged.
+    guard: Any = None
 
 
-def init_train_state(params, optimizer: Optimizer) -> TrainState:
+def init_train_state(params, optimizer: Optimizer, guard: bool = False) -> TrainState:
+    from repro.training import resilience
+
     return TrainState(
         params=params,
         opt_state=optimizer.init(params),
         step=jnp.zeros((), jnp.int32),
+        guard=resilience.init_guard_state() if guard else None,
     )
 
 
@@ -61,6 +68,8 @@ def train_step(
     accum_steps: int = 1,
     bf16_grads: bool = False,
     opt_shardings=None,
+    guard=None,
+    fault=None,
 ):
     """One optimization step. Returns (new_state, metrics).
 
@@ -78,6 +87,18 @@ def train_step(
     is pinned to it with a sharding constraint so ZeRO-1 momentum shards
     survive the compiled step instead of being replicated at the
     partitioner's whim.
+
+    ``guard``: optional :class:`repro.training.resilience.GuardConfig`.
+    Wraps the optimizer apply in the in-graph health check + ``lax.cond``
+    skip: healthy steps are bitwise-identical to the unguarded step (the
+    true branch IS that computation), unhealthy steps leave params and
+    momentum untouched and bump ``state.guard.skipped``. Requires
+    ``state.guard`` (``init_train_state(..., guard=True)``).
+
+    ``fault``: optional :class:`repro.training.faults.Fault` with an
+    in-graph kind — compiled INTO this step variant (the launcher keeps
+    clean and faulty variants separate), used only by resilience tests and
+    the chaos harness.
     """
 
     if bf16_grads:
@@ -119,6 +140,34 @@ def train_step(
         metrics = jax.tree.map(lambda x: x.mean(), ms)
     else:
         (loss, metrics), grads = grad_fn(state.params, batch)
+    if fault is not None:
+        from repro.training import faults as faults_lib
+
+        loss, grads, metrics = faults_lib.inject(fault, loss, grads, metrics)
+    if guard is not None:
+        from repro.training import resilience
+
+        gstate = state.guard
+        if gstate is None:
+            gstate = resilience.init_guard_state()
+        grad_sq_norm = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+        )
+        new_params, new_opt_state, new_guard, healthy = resilience.guarded_update(
+            optimizer, guard, grads, state.opt_state, state.params, gstate,
+            loss, grad_sq_norm, phase,
+        )
+        if opt_shardings is not None:
+            from repro.distributed import zero1 as zero1_lib
+
+            new_opt_state = zero1_lib.constrain(new_opt_state, opt_shardings)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = jnp.sqrt(grad_sq_norm)
+        metrics["healthy"] = healthy.astype(jnp.int32)
+        metrics["skipped"] = new_guard.skipped
+        metrics["ema_loss"] = resilience.debiased_ema(guard, new_guard)
+        metrics["lr_scale"] = new_guard.lr_scale
+        return TrainState(new_params, new_opt_state, state.step + 1, new_guard), metrics
     updates, new_opt_state = optimizer.update(
         grads, state.opt_state, state.params, phase
     )
@@ -131,11 +180,12 @@ def train_step(
     metrics["grad_norm"] = jnp.sqrt(
         sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
     )
-    return TrainState(new_params, new_opt_state, state.step + 1), metrics
+    return TrainState(new_params, new_opt_state, state.step + 1, state.guard), metrics
 
 
 def make_train_step_fns(cfg, optimizer, ctx, donate=True, compute_dtype=jnp.bfloat16,
-                        accum_steps: int = 1, opt_shardings=None):
+                        accum_steps: int = 1, opt_shardings=None, guard=None,
+                        fault=None):
     """Returns {'block': jitted fn, 'full': jitted fn} over (state, batch)."""
     fns = {}
     for phase in ("block", "full"):
@@ -148,6 +198,8 @@ def make_train_step_fns(cfg, optimizer, ctx, donate=True, compute_dtype=jnp.bflo
             compute_dtype=compute_dtype,
             accum_steps=accum_steps,
             opt_shardings=opt_shardings,
+            guard=guard,
+            fault=fault,
         )
         fns[phase] = jax.jit(step, donate_argnums=(0,) if donate else ())
     return fns

@@ -1,0 +1,257 @@
+"""Durable-checkpoint contract: atomic writes, CRC rejection of disk damage,
+restore fallback chain, retention, informative mismatch errors, and a real
+SIGKILL inside ``checkpoint.save`` (subprocess) that must not be able to
+corrupt the snapshot root."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.training import checkpoint, faults
+from repro.training.checkpoint import CheckpointError
+
+
+def _params():
+    return {
+        "w": np.arange(64, dtype=np.float32).reshape(8, 8),
+        "b": np.ones(8, np.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Atomicity + manifest
+# ---------------------------------------------------------------------------
+
+def test_save_is_atomic_and_checksummed(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _params(), step=3, extra={"run": {"arch": "x"}})
+    meta = checkpoint.load_meta(path)
+    assert meta["step"] == 3 and meta["format"] == 2
+    assert set(meta["checksums"]) == {"params/w", "params/b"}
+    # overwrite in place (same path) — still atomic, no debris left behind
+    checkpoint.save(path, _params(), step=4)
+    assert checkpoint.load_meta(path)["step"] == 4
+    leftovers = [n for n in os.listdir(tmp_path) if ".tmp." in n or ".old." in n]
+    assert leftovers == []
+    checkpoint.verify(path)
+
+
+def test_verify_rejects_bitflip(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _params(), step=0)
+    faults.bitflip_file(os.path.join(path, "params.npz"), seed=1)
+    with pytest.raises(CheckpointError, match="CRC32 mismatch|unreadable|manifest"):
+        checkpoint.verify(path)
+    with pytest.raises(CheckpointError):
+        checkpoint.restore(path, _params())
+
+
+def test_verify_rejects_truncation(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _params(), step=0)
+    faults.truncate_file(os.path.join(path, "params.npz"), keep_fraction=0.5)
+    with pytest.raises(CheckpointError):
+        checkpoint.verify(path)
+
+
+def test_verify_rejects_missing_array_file(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _params(), opt_state={"m": np.zeros(4, np.float32)},
+                    step=0)
+    os.remove(os.path.join(path, "opt_state.npz"))
+    with pytest.raises(CheckpointError, match="opt_state.npz missing"):
+        checkpoint.verify(path)
+
+
+def test_corrupt_meta_rejected(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _params(), step=0)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointError, match="unreadable meta.json"):
+        checkpoint.load_meta(path)
+
+
+def test_legacy_snapshot_without_manifest_still_loads(tmp_path):
+    """Pre-manifest (format 1) snapshots pass verify with a readability check
+    only and restore normally — upgrading must not orphan old checkpoints."""
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _params(), step=5)
+    meta = checkpoint.load_meta(path)
+    del meta["checksums"]
+    meta["format"] = 1
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    checkpoint.verify(path)
+    p, _, step = checkpoint.restore(path, _params())
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(p["w"]), _params()["w"])
+
+
+# ---------------------------------------------------------------------------
+# Informative restore errors (satellite: no bare KeyError)
+# ---------------------------------------------------------------------------
+
+def test_key_mismatch_error_names_both_sides(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _params(), step=0)
+    template = {"w": np.zeros((8, 8), np.float32),
+                "b_renamed": np.zeros(8, np.float32)}
+    with pytest.raises(CheckpointError) as ei:
+        checkpoint.restore(path, template)
+    msg = str(ei.value)
+    assert "missing from checkpoint" in msg and "b_renamed" in msg
+    assert "unexpected in checkpoint" in msg and "'b'" in msg
+
+
+def test_run_meta_mismatch_names_fields(tmp_path):
+    path = str(tmp_path / "ckpt")
+    run = {"arch": "granite-8b", "optimizer": "muonbp", "period": 5}
+    checkpoint.save(path, _params(), step=0, extra={"run": run})
+    checkpoint.verify(path, expect_run=run)                    # exact match ok
+    checkpoint.verify(path, expect_run={"arch": "granite-8b",  # new field on
+                                        "zero1": True})        # run side ok
+    with pytest.raises(CheckpointError, match="period.*snapshot=5.*run=7"):
+        checkpoint.verify(path, expect_run={"arch": "granite-8b", "period": 7})
+    with pytest.raises(CheckpointError, match="arch"):
+        checkpoint.restore(path, _params(), expect_run={"arch": "qwen3-4b"})
+
+
+# ---------------------------------------------------------------------------
+# Snapshot roots: retention + newest-valid fallback chain
+# ---------------------------------------------------------------------------
+
+def test_retention_keeps_last_k(tmp_path):
+    root = str(tmp_path)
+    for step in (0, 2, 4, 6, 8):
+        checkpoint.save_snapshot(root, _params(), step=step, keep=3)
+    assert [s for s, _ in checkpoint.list_snapshots(root)] == [4, 6, 8]
+
+
+def test_prune_removes_stale_tmp_dirs(tmp_path):
+    root = str(tmp_path)
+    checkpoint.save_snapshot(root, _params(), step=0)
+    os.makedirs(os.path.join(root, "step_00000002.tmp.abc123"))
+    os.makedirs(os.path.join(root, "step_00000000.old.xyz"))
+    removed = checkpoint.prune_snapshots(root, keep=5)
+    assert len(removed) == 2
+    assert [s for s, _ in checkpoint.list_snapshots(root)] == [0]
+    assert os.listdir(root) == ["step_00000000"]
+
+
+def test_latest_valid_skips_corrupt_newest(tmp_path):
+    root = str(tmp_path)
+    for step in (1, 3, 5):
+        checkpoint.save_snapshot(root, _params(), step=step)
+    faults.bitflip_file(
+        os.path.join(checkpoint.snapshot_path(root, 5), "params.npz"), seed=0)
+    skipped = []
+    got = checkpoint.latest_valid(root, on_skip=lambda p, r: skipped.append((p, r)))
+    assert got is not None
+    path, meta = got
+    assert meta["step"] == 3 and path.endswith("step_00000003")
+    assert len(skipped) == 1 and skipped[0][0].endswith("step_00000005")
+
+
+def test_latest_valid_none_when_empty_or_all_bad(tmp_path):
+    assert checkpoint.latest_valid(str(tmp_path / "nothing")) is None
+    root = str(tmp_path)
+    checkpoint.save_snapshot(root, _params(), step=0)
+    faults.truncate_file(
+        os.path.join(checkpoint.snapshot_path(root, 0), "params.npz"))
+    assert checkpoint.latest_valid(root) is None
+
+
+def test_latest_valid_skips_wrong_run(tmp_path):
+    root = str(tmp_path)
+    checkpoint.save_snapshot(root, _params(), step=0,
+                             extra={"run": {"arch": "a"}})
+    checkpoint.save_snapshot(root, _params(), step=2,
+                             extra={"run": {"arch": "b"}})
+    path, meta = checkpoint.latest_valid(root, expect_run={"arch": "a"})
+    assert meta["step"] == 0
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL inside save (subprocess) — the atomicity claim under real kills
+# ---------------------------------------------------------------------------
+
+_KILL_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    from repro.training import checkpoint
+    params = {{"w": np.arange(64, dtype=np.float32)}}
+    checkpoint.save_snapshot({root!r}, params, step=0)   # survives
+    checkpoint.save_snapshot({root!r}, params, step=2)   # killed via env
+    print("UNREACHABLE")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("env_var", ["REPRO_KILL_IN_SAVE", "REPRO_KILL_MID_SAVE"])
+def test_sigkill_during_save_leaves_previous_snapshot_valid(tmp_path, env_var):
+    """SIGKILL before the finalize rename (or between array writes): the new
+    snapshot must not exist, the previous one must verify, and latest_valid
+    must pick it up. The stale tmp dir is debris, never a candidate."""
+    root = str(tmp_path / "snaps")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env[env_var] = "1"  # arm the crash point for any save with step >= 1
+    proc = subprocess.run(
+        [sys.executable, "-c", _KILL_SCRIPT.format(root=root)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == -signal.SIGKILL, (proc.returncode, proc.stderr[-2000:])
+    assert "UNREACHABLE" not in proc.stdout
+    # torn tmp dir left behind, but no step_00000002 snapshot dir
+    assert [s for s, _ in checkpoint.list_snapshots(root)] == [0]
+    assert any(".tmp." in n for n in os.listdir(root))
+    path, meta = checkpoint.latest_valid(root)
+    assert meta["step"] == 0
+    checkpoint.verify(path)
+    # the next successful save prunes the debris
+    checkpoint.save_snapshot(root, {"w": np.zeros(64, np.float32)}, step=4,
+                             keep=3)
+    assert not any(".tmp." in n for n in os.listdir(root))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: train.py killed mid-save, then --resume (subprocess, slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_train_kill_then_resume_continues(tmp_path):
+    """Launcher-level preemption drill: a kill_in_save fault SIGKILLs the
+    first launch from inside checkpoint.save; the --resume relaunch must
+    restore the newest valid snapshot, log a resume event, and finish all
+    steps with the data stream continuing (not restarting)."""
+    ckpt = str(tmp_path / "ckpt")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", "granite-8b",
+            "--reduced", "--steps", "6", "--batch", "2", "--seq", "32",
+            "--period", "3", "--guard", "--log-every", "1",
+            "--checkpoint-every", "2", "--checkpoint-dir", ckpt,
+            "--keep-checkpoints", "2"]
+    first = subprocess.run(base + ["--fault-plan", "kill_in_save@3"],
+                           capture_output=True, text=True, env=env, timeout=900)
+    assert first.returncode == -signal.SIGKILL, (first.returncode,
+                                                 first.stderr[-2000:])
+    second = subprocess.run(base + ["--resume"], capture_output=True, text=True,
+                            env=env, timeout=900)
+    assert second.returncode == 0, second.stderr[-4000:]
+    recs = [json.loads(l) for l in second.stdout.splitlines()
+            if l.startswith("{")]
+    resume = next(r for r in recs if r.get("event") == "resume")
+    assert resume["step"] > 0 and resume["snapshot"]
+    steps = [r["step"] for r in recs if "loss" in r]
+    assert steps and steps[-1] == 5
+    assert steps == list(range(steps[0], 6))  # contiguous, no gap
+    # final-step snapshot exists (cadence satellite) and is valid
+    path, meta = checkpoint.latest_valid(ckpt)
+    assert meta["step"] == 5

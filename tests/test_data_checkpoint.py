@@ -60,6 +60,56 @@ def test_memmap_dataset(tmp_path):
     np.testing.assert_array_equal(batch["tokens"][:, 1:], batch["labels"][:, :-1])
 
 
+def test_synthetic_state_roundtrip():
+    """state()/set_state() resumes the token stream exactly where it left
+    off — the checkpoint layer persists this so a resumed run doesn't replay
+    (or skip) data."""
+    cfg = tiny_cfg("granite-8b")
+    pipe = SyntheticLM(cfg, 4, 32, seed=7)
+    it = iter(pipe)
+    for _ in range(3):
+        next(it)
+    saved = pipe.state()
+    want = [next(it) for _ in range(2)]
+
+    fresh = SyntheticLM(cfg, 4, 32, seed=7)
+    fresh.set_state(saved)
+    got = [next(iter(fresh)) for _ in range(2)]
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_synthetic_state_json_serializable():
+    import json
+
+    cfg = tiny_cfg("granite-8b")
+    pipe = SyntheticLM(cfg, 2, 16, seed=0)
+    it = iter(pipe)
+    next(it)
+    state = json.loads(json.dumps(pipe.state()))  # meta.json round-trip
+    a = next(it)
+    pipe2 = SyntheticLM(cfg, 2, 16, seed=0)
+    pipe2.set_state(state)
+    b = next(iter(pipe2))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_memmap_state_roundtrip(tmp_path):
+    tokens = np.arange(4000, dtype=np.uint16) % 128
+    path = os.path.join(tmp_path, "tokens.bin")
+    tokens.tofile(path)
+    ds = MemmapDataset(path, batch=4, seq_len=16, seed=3)
+    it = iter(ds)
+    next(it)
+    saved = ds.state()
+    want = next(it)
+    ds2 = MemmapDataset(path, batch=4, seq_len=16, seed=3)
+    ds2.set_state(saved)
+    got = next(iter(ds2))
+    np.testing.assert_array_equal(want["tokens"], got["tokens"])
+
+
 def test_checkpoint_roundtrip(tmp_path, key):
     cfg = tiny_cfg("mixtral-8x7b")
     params = init_params(key, cfg)
