@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, timeit
+from benchmarks.common import row, timeit_stats
 from repro.configs import get_config
 from repro.core import adamw, block_muon, combine, dion, label_tree, muon, muon_full
 from repro.core.blocking import BlockSpec2D
@@ -69,10 +69,13 @@ def run(quick: bool = False) -> list[str]:
             def step(g, s, p):
                 return opt.update(g, s, p, phase)
 
-            us = timeit(step, grads, state, params, warmup=1, iters=3)
+            st = timeit_stats(step, grads, state, params, warmup=1, iters=3,
+                              name=f"opt_step_{name}")
             rows.append(
-                row(f"opt_step_{name}", us, f"{n_params/1e6:.1f}M_params",
-                    backend=backend, bucketing=bucket_label)
+                row(f"opt_step_{name}", st["median_us"],
+                    f"{n_params/1e6:.1f}M_params",
+                    backend=backend, bucketing=bucket_label,
+                    p50_us=f"{st['p50_us']:.1f}", p95_us=f"{st['p95_us']:.1f}")
             )
 
     # shard_map engine full step, once per schedule (barrier vs pipelined).
@@ -93,10 +96,13 @@ def run(quick: bool = False) -> list[str]:
         def estep(g, s, p, _opt=opt):
             return _opt.update(g, s, p, "full")
 
-        us = timeit(estep, grads, state, params, warmup=1, iters=3)
+        st = timeit_stats(estep, grads, state, params, warmup=1, iters=3,
+                          name="opt_step_muonbp_full_engine")
         rows.append(
-            row("opt_step_muonbp_full_engine", us, f"{n_params/1e6:.1f}M_params",
+            row("opt_step_muonbp_full_engine", st["median_us"],
+                f"{n_params/1e6:.1f}M_params",
                 backend="jnp", bucketing="on", engine="shard_map",
-                schedule=sched)
+                schedule=sched,
+                p50_us=f"{st['p50_us']:.1f}", p95_us=f"{st['p95_us']:.1f}")
         )
     return rows

@@ -13,11 +13,13 @@ for the paper artifact it reproduces):
   two_stepsize   — Theorem 2: tied vs untied stepsizes
   roofline       — Sec Roofline: terms per (arch x shape x mesh) from dryrun
 
-A ``--quick`` pass over the full module list also writes a ``BENCH_pr4.json``
+A ``--quick`` pass over the full module list also writes a ``BENCH_pr7.json``
 perf snapshot (rows + computed regression markers) so the repo carries a
 bench trajectory; ``scripts/ci.sh`` fails when any *tracked* ``BENCH_*.json``
 carries a non-empty ``regressions`` list. ``--bench-json PATH`` overrides
-the snapshot path (pass ``''`` to disable).
+the snapshot path (pass ``''`` to disable). Timing rows carry span-layer
+``p50_us``/``p95_us`` percentiles (``common.timeit_stats``) where the
+module measures wall time.
 
 Env: REPRO_BENCH_QUICK=1 (or ``--quick``) for a fast pass;
 REPRO_BENCH_ONLY=mod1,mod2 (or ``--only mod1,mod2``) to filter.
@@ -46,7 +48,7 @@ MODULES = [
     "roofline",
 ]
 
-BENCH_SNAPSHOT = "BENCH_pr4.json"
+BENCH_SNAPSHOT = "BENCH_pr7.json"
 
 
 def parse_rows(lines: list[str]) -> list[dict]:
@@ -102,7 +104,7 @@ def find_regressions(rows: list[dict]) -> list[str]:
 def write_snapshot(path: str, rows: list[dict], quick: bool) -> None:
     snap = {
         "schema": 1,
-        "pr": 4,
+        "pr": 7,
         "quick": quick,
         "columns": list(COLUMNS),
         "rows": rows,
@@ -121,7 +123,7 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated module list")
     ap.add_argument("--bench-json", default=None,
                     help="write a JSON snapshot of the rows + regression "
-                         "markers ('' disables; default: BENCH_pr4.json on a "
+                         "markers ('' disables; default: BENCH_pr7.json on a "
                          "full --quick pass)")
     args = ap.parse_args()
     quick = args.quick or os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
@@ -138,7 +140,7 @@ def main() -> None:
                 print(line, flush=True)
         except Exception:
             traceback.print_exc(file=sys.stderr)
-            line = f"{name}_FAILED,0.0,see_stderr,-,-,-,-,-,-"
+            line = f"{name}_FAILED,0.0,see_stderr,-,-,-,-,-,-,-,-"
             lines.append(line)
             print(line, flush=True)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr, flush=True)

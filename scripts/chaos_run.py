@@ -10,7 +10,13 @@ completes, then asserts the whole trajectory is sane:
 * the logged steps cover the run contiguously across launches,
 * the final step is ``steps - 1`` and its loss is finite,
 * with ``--guard``, the cumulative skip counter matches the number of
-  injected grad faults (each NaN/Inf/spike was skipped, none leaked).
+  injected grad faults (each NaN/Inf/spike was skipped, none leaked),
+* telemetry is crash-durable: the JSONL trail (``--log-file``, injected
+  automatically next to the checkpoint dir when not given) stays parseable
+  through every SIGKILL — at most one torn final line — and every record
+  the parser saw on stdout is present on disk, including those from
+  launches that died. This is checked after EACH killed launch, not just
+  at the end.
 
 Exit 0 only when every assertion holds — this is the CI preemption smoke.
 
@@ -31,7 +37,47 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro.obs.bus import read_jsonl  # noqa: E402
 from repro.training.faults import FaultPlan  # noqa: E402
+
+
+def telemetry_failures(log_file: str, stdout_recs: list[dict],
+                       label: str) -> list[str]:
+    """Durability check: the JSONL trail parses (<=1 torn final line) and
+    contains every record observed on stdout so far (the JSONL sink writes
+    and fsyncs before the stdout sink prints)."""
+    torn: list[str] = []
+    try:
+        disk = read_jsonl(log_file,
+                          on_torn=lambda n, _line: torn.append(f"line {n}"))
+    except FileNotFoundError:
+        return [f"{label}: telemetry file {log_file} missing"]
+    except ValueError as e:
+        return [f"{label}: telemetry corrupt mid-file: {e}"]
+    from collections import Counter
+
+    def key(r: dict) -> str:
+        return json.dumps({k: v for k, v in r.items() if k != "ts"},
+                          sort_keys=True)
+
+    on_disk = Counter(key(r) for r in disk)
+    missing = []
+    for r in stdout_recs:
+        k = key(r)
+        if on_disk[k] > 0:
+            on_disk[k] -= 1
+        else:
+            missing.append(k)
+    out = []
+    if missing:
+        out.append(f"{label}: {len(missing)} stdout record(s) absent from "
+                   f"{log_file} (first: {missing[0][:120]})")
+    if torn:
+        # One torn final line is the expected SIGKILL artifact; read_jsonl
+        # already rejects tears anywhere else.
+        print(f"chaos_run: note — torn final JSONL line after kill "
+              f"({torn[0]}), as expected", flush=True)
+    return out
 
 
 def run_once(cmd: list[str]) -> tuple[int, list[dict]]:
@@ -69,14 +115,32 @@ def main() -> int:
     guarded = "--guard" in train_args
 
     plan = FaultPlan.parse(args.plan) if args.plan else None
+    # Telemetry durability is part of the drill: ensure a JSONL trail
+    # exists (next to the checkpoint dir unless the caller chose one) so
+    # the post-kill assertions below have a file to check.
+    if "--log-file" in train_args:
+        log_file = train_args[train_args.index("--log-file") + 1]
+    else:
+        if "--checkpoint-dir" in train_args:
+            ckpt_dir = train_args[train_args.index("--checkpoint-dir") + 1]
+        else:
+            ckpt_dir = "/tmp/repro_chaos"
+        log_file = ckpt_dir + "/telemetry.jsonl"
+        train_args = train_args + ["--log-file", log_file]
     base = [sys.executable, "-m", "repro.launch.train"] + train_args
 
+    failures: list[str] = []
     launches: list[list[dict]] = []
     restarts = 0
     cmd = base + (["--fault-plan", plan.spec()] if plan else [])
     while True:
         rc, recs = run_once(cmd)
         launches.append(recs)
+        # Crash-durability: check after EVERY launch — most importantly the
+        # killed ones, where the buffered-log design lost everything.
+        stdout_recs = [r for rs in launches for r in rs]
+        failures += telemetry_failures(log_file, stdout_recs,
+                                       f"launch {len(launches) - 1} (rc={rc})")
         if rc == 0:
             break
         kind = "killed" if rc < 0 or rc == 137 else f"exit {rc}"
@@ -92,7 +156,6 @@ def main() -> int:
             ["--fault-plan", replay.spec()] if replay and replay.faults else [])
 
     # ---- trajectory assertions ------------------------------------------
-    failures = []
     step_recs = [r for recs in launches for r in recs if "loss" in r]
     if not step_recs or step_recs[-1]["step"] != steps - 1:
         failures.append(f"final logged step is not {steps - 1}: "

@@ -1,10 +1,17 @@
 #!/usr/bin/env python
-"""Docs coverage gate: every launcher CLI flag must appear in the operator guide.
+"""Docs coverage gate: flags and telemetry schema must be documented.
 
-Scans ``add_argument`` calls in launch/train.py, launch/perf.py, and
-launch/dryrun.py (source-level regex — importing the launchers would touch
-XLA_FLAGS/device state) and fails if any long flag is missing from
-``docs/operators-guide.md``. Run by scripts/ci.sh.
+Three checks, all source-level regex (importing the launchers would touch
+XLA_FLAGS/device state):
+
+* every ``add_argument`` long flag in launch/train.py, launch/perf.py,
+  and launch/dryrun.py appears in ``docs/operators-guide.md``;
+* every observability flag (``--log-file``, ``--obs-*``, ``--drift-*``,
+  ``--profile-*``) also appears in ``docs/observability.md``;
+* every event type registered in ``repro.obs.bus.EVENT_FIELDS`` appears in
+  ``docs/observability.md`` — add an event, document it, or CI fails.
+
+Run by scripts/ci.sh.
 """
 
 from __future__ import annotations
@@ -20,10 +27,15 @@ LAUNCHERS = [
     REPO / "src" / "repro" / "launch" / "dryrun.py",
 ]
 GUIDE = REPO / "docs" / "operators-guide.md"
+OBS_GUIDE = REPO / "docs" / "observability.md"
+BUS_SRC = REPO / "src" / "repro" / "obs" / "bus.py"
 
 # every long option mentioned in an add_argument call (aliases included)
 _FLAG_RE = re.compile(r"add_argument\(\s*((?:\"--[\w-]+\",?\s*)+)")
 _OPT_RE = re.compile(r"\"(--[\w-]+)\"")
+
+# observability flags: must ALSO be covered by docs/observability.md
+_OBS_FLAG_RE = re.compile(r"^--(log-file|obs-[\w-]+|drift-[\w-]+|profile-[\w-]+)$")
 
 
 def launcher_flags(path: Path) -> list[str]:
@@ -33,25 +45,56 @@ def launcher_flags(path: Path) -> list[str]:
     return flags
 
 
+def bus_event_types() -> list[str]:
+    """Event type names from the EVENT_FIELDS registry, by source regex."""
+    src = BUS_SRC.read_text()
+    m = re.search(r"EVENT_FIELDS[^=]*=\s*\{(.*?)\n\}", src, re.S)
+    if not m:
+        raise SystemExit(f"could not locate EVENT_FIELDS in {BUS_SRC}")
+    return re.findall(r"^\s*\"([\w-]+)\":", m.group(1), re.M)
+
+
 def main() -> int:
-    if not GUIDE.exists():
-        print(f"missing {GUIDE}", file=sys.stderr)
-        return 1
+    failures: list[str] = []
+    for doc in (GUIDE, OBS_GUIDE):
+        if not doc.exists():
+            print(f"missing {doc}", file=sys.stderr)
+            return 1
     guide = GUIDE.read_text()
-    missing: list[tuple[str, str]] = []
+    obs_guide = OBS_GUIDE.read_text()
+
     total = 0
+    obs_total = 0
     for path in LAUNCHERS:
         for flag in launcher_flags(path):
             total += 1
             if flag not in guide:
-                missing.append((path.name, flag))
-    if missing:
-        for name, flag in missing:
-            print(f"{name}: {flag} not documented in docs/operators-guide.md",
-                  file=sys.stderr)
+                failures.append(
+                    f"{path.name}: {flag} not documented in "
+                    f"docs/operators-guide.md")
+            if _OBS_FLAG_RE.match(flag):
+                obs_total += 1
+                if flag not in obs_guide:
+                    failures.append(
+                        f"{path.name}: {flag} not documented in "
+                        f"docs/observability.md")
+
+    events = bus_event_types()
+    for ev in events:
+        # Require the quoted form ("step", "drift", ...) so prose uses of
+        # common words don't count as coverage.
+        if f'"{ev}"' not in obs_guide and f"`{ev}`" not in obs_guide:
+            failures.append(
+                f"obs/bus.py: event type {ev!r} not documented in "
+                f"docs/observability.md")
+
+    if failures:
+        for f in failures:
+            print(f, file=sys.stderr)
         return 1
-    print(f"docs check: {total} launcher flags all documented in "
-          f"docs/operators-guide.md")
+    print(f"docs check: {total} launcher flags documented in "
+          f"docs/operators-guide.md; {obs_total} obs flags and "
+          f"{len(events)} event types documented in docs/observability.md")
     return 0
 
 

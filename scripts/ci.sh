@@ -88,6 +88,19 @@ python scripts/chaos_run.py --plan 'nan_grads@3,kill_in_save@5' --max-restarts 3
     --arch granite-8b --reduced --steps 10 --batch 2 --seq 32 --period 3 \
     --guard --checkpoint-every 2 --checkpoint-dir /tmp/repro_chaos --log-every 1
 
+echo "== observability smoke (telemetry JSONL -> obs_report) =="
+# Short guarded run streaming fsync'd JSONL telemetry (period 3 over 6
+# steps covers both MuonBP phases), then the report must parse it
+# cleanly: zero schema violations (--strict), >=1 step span per phase,
+# and zero drift events (1-device mesh: the full-minus-block comm delta
+# is zero bytes, so the drift monitor must stay silent by construction).
+rm -rf /tmp/repro_obs
+python -m repro.launch.train \
+    --arch granite-8b --reduced --steps 6 --batch 2 --seq 32 --period 3 \
+    --guard --log-every 1 --obs-block --log-file /tmp/repro_obs/run.jsonl
+python scripts/obs_report.py /tmp/repro_obs/run.jsonl \
+    --strict --require-phase-spans --require-zero-drift
+
 echo "== docs flag coverage =="
 # Every train.py/perf.py/dryrun.py CLI flag must appear in the operator guide.
 python scripts/check_docs.py

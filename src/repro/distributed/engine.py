@@ -249,17 +249,27 @@ class ShardMapEngine:
                     o = jax.lax.slice_in_dim(o, 0, le.lead, axis=0)
             return o
 
+        # Trace annotations: named_scope only attaches names to the traced
+        # ops (HLO metadata / profiler TraceAnnotation rows keyed
+        # ``muonbp.<phase>.s<stage>.<gather|ns|writeback>``), so a profiler
+        # capture reads against PipelineSchedule.describe() stage indices
+        # while the compiled program stays bitwise-identical.
+        scope = prog.phase
+
         def barrier_body(*xs):
-            ins = [
-                _gather_trailing(x, le.spec, sizes) if le.gather is not None else x
-                for x, le in zip(xs, leaf_execs)
-            ]
-            outs = program_lib.execute_ops(
-                prog.ops, ins, orth, layer_shard_apply=ls_apply
-            )
-            return tuple(
-                writeback(o, le) for o, le in zip(outs, leaf_execs)
-            )
+            with jax.named_scope(f"muonbp.{scope}.gather"):
+                ins = [
+                    _gather_trailing(x, le.spec, sizes) if le.gather is not None else x
+                    for x, le in zip(xs, leaf_execs)
+                ]
+            with jax.named_scope(f"muonbp.{scope}.ns"):
+                outs = program_lib.execute_ops(
+                    prog.ops, ins, orth, layer_shard_apply=ls_apply
+                )
+            with jax.named_scope(f"muonbp.{scope}.writeback"):
+                return tuple(
+                    writeback(o, le) for o, le in zip(outs, leaf_execs)
+                )
 
         def pipelined_body(*xs):
             results: list = [None] * len(xs)
@@ -267,26 +277,31 @@ class ShardMapEngine:
             gathered: dict = {}  # leaf index -> gathered (global-trailing) input
             gate = None          # NS output from the previous stage's compute
             for stage in prog.schedule.stages:
-                for li in stage.gathers:
-                    x = xs[li]
-                    if gate is not None:
-                        # Double-buffer gate: this gather may not issue
-                        # before the NS two computes back has retired.
-                        x, _ = jax.lax.optimization_barrier((x, gate))
-                    gathered[li] = _gather_trailing(x, leaf_execs[li].spec, sizes)
+                with jax.named_scope(f"muonbp.{scope}.s{stage.index}.gather"):
+                    for li in stage.gathers:
+                        x = xs[li]
+                        if gate is not None:
+                            # Double-buffer gate: this gather may not issue
+                            # before the NS two computes back has retired.
+                            x, _ = jax.lax.optimization_barrier((x, gate))
+                        gathered[li] = _gather_trailing(
+                            x, leaf_execs[li].spec, sizes
+                        )
                 if stage.compute is not None:
                     op = prog.ops[stage.compute]
                     ins = list(xs)
                     for le in op.leaves:
                         if le.index in gathered:
                             ins[le.index] = gathered.pop(le.index)
-                    for idx, out in program_lib.execute_op(
-                        op, ins, orth, layer_shard_apply=ls_apply
-                    ):
-                        pending[idx] = out
-                        gate = out
-                for li in stage.writeback:
-                    results[li] = writeback(pending.pop(li), leaf_execs[li])
+                    with jax.named_scope(f"muonbp.{scope}.s{stage.index}.ns"):
+                        for idx, out in program_lib.execute_op(
+                            op, ins, orth, layer_shard_apply=ls_apply
+                        ):
+                            pending[idx] = out
+                            gate = out
+                with jax.named_scope(f"muonbp.{scope}.s{stage.index}.writeback"):
+                    for li in stage.writeback:
+                        results[li] = writeback(pending.pop(li), leaf_execs[li])
             assert not pending and all(r is not None for r in results), (
                 "pipeline schedule left leaves unwritten"
             )

@@ -63,6 +63,26 @@ PIPELINE_VMEM_RESERVE_BY_LINK = {
 _REGISTRY: dict[str, Callable] = {}
 _override: Optional[str] = None
 
+# Trace-time launch observer. ``repro.obs`` sets this (via
+# ``set_launch_hook``) to count NS dispatches per backend/strategy/shape —
+# dispatch stays import-clean of the obs layer. The hook fires when a call
+# is TRACED (once per jit specialization), not per device execution, so it
+# adds nothing to the compiled program and cannot sync the hot path.
+_launch_hook: Optional[Callable[[str, Optional[str], tuple], None]] = None
+
+
+def set_launch_hook(
+    fn: Optional[Callable[[str, Optional[str], tuple], None]],
+) -> None:
+    """Install (or with None, clear) the NS launch observer.
+
+    ``fn(backend, strategy, shape)`` is invoked from :func:`orthogonalize`
+    at trace time; exceptions propagate (a broken observer should fail
+    loudly in tests, not silently drop counts).
+    """
+    global _launch_hook
+    _launch_hook = fn
+
 
 def register_backend(name: str, fn: Callable) -> None:
     """Register ``fn(g, steps, coeffs, eps, strategy) -> array`` under ``name``."""
@@ -199,6 +219,8 @@ def orthogonalize(
         raise ValueError(
             f"unknown NS strategy {strategy!r}; available: {STRATEGIES}"
         )
+    if _launch_hook is not None:
+        _launch_hook(name, strategy, tuple(g.shape))
     return _REGISTRY[name](g, steps, coeffs, eps, strategy)
 
 

@@ -55,6 +55,8 @@ from repro.distributed import zero1 as zero1_lib
 from repro.launch.mesh import make_mesh_from_spec, make_production_mesh
 from repro.models.model import decode_step, init_params, prefill
 from repro.models.transformer import init_cache
+from repro.obs import get_bus
+from repro.obs.spans import record_span
 from repro.sharding import specs as sh
 from repro.training.train_step import TrainState, train_step
 
@@ -409,6 +411,17 @@ def run_and_save(arch, shape, multi_pod, phase, skip_existing=True, variant=None
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
     status = "SKIPPED" if rec.get("skipped") else ("ERROR" if "error" in rec else "ok")
+    # Telemetry (a no-op bus unless --log-file installed one): lower/compile
+    # spans plus one summary event per combo, same schema as train runs.
+    bus = get_bus()
+    if status == "ok":
+        record_span(bus, "dryrun.lower", rec["lower_s"], arch=arch, shape=shape)
+        record_span(bus, "dryrun.compile", rec["compile_s"], arch=arch, shape=shape)
+    bus.event(
+        "dryrun_combo", phase=rec.get("phase"), lower_s=rec.get("lower_s"),
+        compile_s=rec.get("compile_s"), arch=arch, shape=shape,
+        mesh=rec.get("mesh", mesh_str), status=status,
+        collective_bytes_total=rec.get("collective_bytes_total"))
     print(f"[dryrun] {label}: {status} "
           f"(compile {rec.get('compile_s', '-')}s, coll {rec.get('collective_bytes_total', '-')} B)",
           flush=True)
@@ -441,7 +454,14 @@ def main():
                          "indivisible layer counts")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true", help="re-run existing results")
+    ap.add_argument("--log-file", default=None,
+                    help="append lower/compile spans and per-combo "
+                         "dryrun_combo events as JSONL (repro.obs schema)")
     args = ap.parse_args()
+    if args.log_file:
+        from repro.obs import Bus, JsonlSink, set_bus
+
+        set_bus(Bus([JsonlSink(args.log_file)]))
     variant = {}
     if args.full_schedule:
         variant["full_schedule"] = args.full_schedule

@@ -57,7 +57,15 @@ def main():
                          "'barrier' is the gather-all/NS-all/slice-all A/B)")
     ap.add_argument("--bf16-grads", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--log-file", default=None,
+                    help="append lower/compile spans and a perf_record event "
+                         "as JSONL (repro.obs schema)")
     args = ap.parse_args()
+
+    if args.log_file:
+        from repro.obs import Bus, JsonlSink, set_bus
+
+        set_bus(Bus([JsonlSink(args.log_file)]))
 
     path = os.path.join(RESULTS_DIR, args.name + ".json")
     if os.path.exists(path) and not args.force:
@@ -100,6 +108,17 @@ def main():
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
+    from repro.obs import get_bus
+    from repro.obs.spans import record_span
+
+    bus = get_bus()
+    record_span(bus, "perf.lower", rec.get("lower_s") or 0.0, artifact=args.name)
+    record_span(bus, "perf.compile", rec.get("compile_s") or 0.0,
+                artifact=args.name)
+    bus.event("perf_record", name=args.name, arch=args.arch, shape=args.shape,
+              phase=args.phase, compile_s=rec.get("compile_s"),
+              collective_bytes_total=rec.get("collective_bytes_total"),
+              variant=rec.get("variant"))
     cal = rec.get("calibrated") or {}
     print(f"[perf] {args.name}: compile {rec.get('compile_s')}s")
     if "flops" in cal:

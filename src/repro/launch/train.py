@@ -20,6 +20,17 @@ from the newest *valid* one, including optimizer shards, the data-stream
 position, and the guard counters. ``--fault-plan`` injects deterministic
 faults for chaos testing (scripts/chaos_run.py).
 
+Telemetry flows through ``repro.obs``: every record (per-step lines, the
+checkpoint/resume/abort/skip_snapshot events, spans, drift reports,
+counters) goes to the event bus — stdout keeps the exact legacy wire
+format, and ``--log-file`` append-streams fsync'd JSONL so a SIGKILL
+mid-run (preemption, ``--fault-plan`` kills) preserves every record up to
+the kill. ``scripts/obs_report.py`` aggregates the JSONL; the
+plan-vs-runtime drift monitor (``--drift-threshold``) compares measured
+full-minus-block step wall time against ``CommPlan``-predicted comm cost;
+``--profile-steps A:B`` captures a profiler trace whose stage names match
+``UpdateProgram.summary()``. See docs/observability.md.
+
 See docs/operators-guide.md for flag-by-flag guidance.
 
 Example (CPU-scale):
@@ -46,8 +57,11 @@ from repro.core import adamw, block_muon, combine, dion, label_tree, muon, muon_
 from repro.core.muon import phase_for_step
 from repro.core.schedule import cosine, wsd
 from repro.data.pipeline import SyntheticLM
+from repro.kernels import dispatch
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import init_params
+from repro.obs import Bus, DriftConfig, DriftMonitor, JsonlSink, StdoutSink, set_bus, span
+from repro.obs.spans import parse_profile_window
 from repro.sharding import specs as sh
 from repro.training import checkpoint, resilience
 from repro.training import faults as faults_lib
@@ -170,8 +184,47 @@ def main():
                     help="deterministic fault injection spec, e.g. "
                          "'nan_grads@7,spike_loss@9x8,kill_in_save@12' "
                          "(repro.training.faults; chaos testing only)")
-    ap.add_argument("--log-file", default=None)
+    ap.add_argument("--log-file", default=None,
+                    help="append-stream every telemetry record (steps, spans, "
+                         "events, counters) as fsync'd JSONL; crash-safe — a "
+                         "kill loses at most the record being written. Read "
+                         "with scripts/obs_report.py")
+    ap.add_argument("--obs-block", action="store_true",
+                    help="block_until_ready inside each step span so wall "
+                         "times include device completion (adds one host "
+                         "sync per step; required for meaningful drift "
+                         "monitoring)")
+    ap.add_argument("--drift-threshold", type=float, default=2.0,
+                    help="emit a 'drift' event when measured full-minus-block "
+                         "step time disagrees with the CommPlan-modeled comm "
+                         "cost by more than this factor (either direction); "
+                         "0 disables the monitor")
+    ap.add_argument("--profile-steps", default=None,
+                    help="capture a jax profiler trace over steps A:B "
+                         "(half-open window), e.g. '3:6'; stage regions are "
+                         "named muonbp.<phase>.s<stage>.<gather|ns|writeback>")
+    ap.add_argument("--profile-dir", default="/tmp/repro_profile",
+                    help="output dir for the --profile-steps trace")
     args = ap.parse_args()
+
+    # Telemetry bus. Sink order matters: the durable JSONL sink comes
+    # FIRST, so every record a stdout parser (chaos_run) observes is
+    # already fsync'd on disk — the containment invariant the chaos drill
+    # asserts after each kill.
+    sinks: list = []
+    if args.log_file:
+        sinks.append(JsonlSink(args.log_file))
+    sinks.append(StdoutSink())
+    bus = Bus(sinks)
+    set_bus(bus)
+    bus.event("run_start", argv=sys.argv[1:], args=vars(args))
+    # NS launch counters: fires at trace time (per jit specialization),
+    # never per executed step — zero hot-path cost.
+    dispatch.set_launch_hook(
+        lambda backend, strategy, shape: bus.inc(
+            f"ns_launch.{backend}.{strategy or 'auto'}"))
+    prof_window = (parse_profile_window(args.profile_steps)
+                   if args.profile_steps else None)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -217,6 +270,29 @@ def main():
         period=args.period, schedule_fn=sched, block_specs=bspecs,
         engine=engine, comm=comm,
     )
+
+    # Plan-vs-runtime drift monitor: block steps are the compute baseline,
+    # so the full-minus-block wall-time delta prices exactly the extra
+    # full-step collectives — the per-link byte delta from the same
+    # CommPlan the HLO audit checks (apply-phase bytes cancel in the
+    # difference). On a 1-device mesh the delta is zero bytes and the
+    # monitor is silent by construction.
+    drift_mon = None
+    if args.drift_threshold > 0 and period is not None and args.optimizer != "adamw":
+        from repro.distributed.plan import plan_comm
+
+        comm_plan = plan_comm(
+            params, pspecs, mesh, labels=labels, block_specs=bspecs,
+            zero1=args.zero1, zero1_flatten=args.zero1_flatten)
+        full_b = comm_plan.predicted_by_link("full")
+        block_b = comm_plan.predicted_by_link("block")
+        drift_mon = DriftMonitor(
+            comm_bytes_by_link={
+                k: max(full_b.get(k, 0) - block_b.get(k, 0), 0) for k in full_b
+            },
+            cfg=DriftConfig(threshold=args.drift_threshold),
+            bus=bus,
+        )
 
     guard_cfg = (
         resilience.GuardConfig(
@@ -274,37 +350,43 @@ def main():
             "data_state": pipe_src.state(),
             "guard": resilience.guard_to_meta(state.guard),
         }
-        path = checkpoint.save_snapshot(
-            args.checkpoint_dir, state.params, state.opt_state, step=step,
-            extra=extra, keep=args.keep_checkpoints)
-        print(json.dumps({"event": "checkpoint", "step": step, "path": path}),
-              flush=True)
+        with span(bus, "checkpoint.save", step=step):
+            path = checkpoint.save_snapshot(
+                args.checkpoint_dir, state.params, state.opt_state, step=step,
+                extra=extra, keep=args.keep_checkpoints)
+        bus.inc("checkpoint.saves")
+        bus.emit({"event": "checkpoint", "step": step, "path": path})
+
+    def on_skip_snapshot(p, why):
+        bus.inc("checkpoint.fallbacks")
+        bus.emit({"event": "skip_snapshot", "path": p, "why": why})
 
     start_step = 0
     if args.resume:
-        found = checkpoint.latest_valid(
-            args.checkpoint_dir, expect_run=run_meta,
-            on_skip=lambda p, why: print(json.dumps(
-                {"event": "skip_snapshot", "path": p, "why": why}), flush=True))
+        with span(bus, "resume"):
+            found = checkpoint.latest_valid(
+                args.checkpoint_dir, expect_run=run_meta,
+                on_skip=on_skip_snapshot)
+            if found is not None:
+                ck_path, meta = found
+                r_params, r_opt, saved_step = checkpoint.restore(
+                    ck_path, state.params, state.opt_state,
+                    shardings=sh.named(mesh, pspecs), opt_shardings=opt_shardings,
+                    verify_checksums=False)  # latest_valid already verified
+                state = state._replace(
+                    params=r_params, opt_state=r_opt,
+                    step=jnp.asarray(saved_step + 1, jnp.int32),
+                    guard=(resilience.guard_from_meta(meta.get("guard"))
+                           if args.guard else None))
+                if meta.get("data_state"):
+                    pipe_src.set_state(meta["data_state"])
+                start_step = saved_step + 1
         if found is not None:
-            ck_path, meta = found
-            r_params, r_opt, saved_step = checkpoint.restore(
-                ck_path, state.params, state.opt_state,
-                shardings=sh.named(mesh, pspecs), opt_shardings=opt_shardings,
-                verify_checksums=False)  # latest_valid already verified
-            state = state._replace(
-                params=r_params, opt_state=r_opt,
-                step=jnp.asarray(saved_step + 1, jnp.int32),
-                guard=(resilience.guard_from_meta(meta.get("guard"))
-                       if args.guard else None))
-            if meta.get("data_state"):
-                pipe_src.set_state(meta["data_state"])
-            start_step = saved_step + 1
-            print(json.dumps({"event": "resume", "step": start_step,
-                              "snapshot": ck_path}), flush=True)
+            bus.inc("resumes")
+            bus.emit({"event": "resume", "step": start_step,
+                      "snapshot": ck_path})
         else:
-            print(json.dumps({"event": "resume", "step": 0,
-                              "snapshot": None}), flush=True)
+            bus.emit({"event": "resume", "step": 0, "snapshot": None})
 
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M optimizer={args.optimizer} "
@@ -324,23 +406,54 @@ def main():
         # on skips that happened before the preemption.
         escalator._last_total = int(state.guard.skipped)
 
-    log = []
+    def finish(status):
+        if drift_mon is not None:
+            drift_mon.report()
+        if prof_window is not None and profiling[0]:
+            jax.profiler.stop_trace()
+            profiling[0] = False
+        bus.event("run_end", steps=args.steps - start_step,
+                  wall_s=round(time.time() - t0, 1), status=status,
+                  counters=dict(bus.counters))
+        bus.close()
+
     t0 = time.time()
     forced_full = False
+    profiling = [False]
     for step in range(start_step, args.steps):
+        if prof_window is not None and step == prof_window[0]:
+            jax.profiler.start_trace(args.profile_dir)
+            profiling[0] = True
         batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
         phase = phase_for_step(step, period) if args.optimizer != "adamw" else "block"
         if forced_full and args.optimizer != "adamw":
             phase = "full"
         forced_full = False
         fault = plan.grad_fault(step) if plan else None
-        state, metrics = step_fn(phase, fault)(state, batch)
+        # The step span times dispatch only unless --obs-block pulls device
+        # completion inside the clock; either way no extra device fetch
+        # happens here, so instrumented steps stay bitwise-identical.
+        with span(bus, "step",
+                  sync=((lambda: jax.block_until_ready(state))
+                        if args.obs_block else None),
+                  step=step, phase=phase) as sp:
+            state, metrics = step_fn(phase, fault)(state, batch)
+        if drift_mon is not None:
+            drift_mon.observe(step, phase, sp.dur_s)
+        if prof_window is not None and profiling[0] and step == prof_window[1] - 1:
+            jax.profiler.stop_trace()
+            profiling[0] = False
         action = "none"
         skipped = healthy = None
         if escalator is not None:
             skipped = int(metrics["skipped"])
             healthy = int(metrics["healthy"])
+            if not healthy:
+                bus.inc("guard.skipped_steps")
             action = escalator.observe(step, skipped)
+            if action != "none":
+                bus.inc(f"escalation.{action}")
+                bus.event("escalation", step=step, action=action)
             if action == "force_full":
                 forced_full = True
             elif action == "backoff":
@@ -354,21 +467,18 @@ def main():
                 rec.update(healthy=healthy, skipped=skipped,
                            escalation=action,
                            lr_scale=round(float(metrics["lr_scale"]), 4))
-            log.append(rec)
-            print(json.dumps(rec), flush=True)
+            bus.emit(rec)
         if args.checkpoint_every and (
                 (step and step % args.checkpoint_every == 0)
                 or step == args.steps - 1):
             save_ckpt(step)
         if action == "abort":
             save_ckpt(step)
-            print(json.dumps({"event": "abort", "step": step,
-                              "consecutive_skips": escalator.consecutive}),
-                  flush=True)
+            bus.emit({"event": "abort", "step": step,
+                      "consecutive_skips": escalator.consecutive})
+            finish("abort")
             sys.exit(3)
-    if args.log_file:
-        with open(args.log_file, "w") as f:
-            json.dump({"args": vars(args), "log": log}, f, indent=1)
+    finish("ok")
 
 
 if __name__ == "__main__":

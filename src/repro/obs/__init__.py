@@ -1,0 +1,47 @@
+"""Structured observability: event bus, span timing, plan-vs-runtime drift.
+
+Three small modules, threaded through the launchers, the distributed
+engine, and the benchmarks:
+
+* :mod:`repro.obs.bus` — the event/metric bus. Every telemetry record is
+  one flat JSON object; sinks decide where it goes (crash-safe append-mode
+  JSONL, stdout in the legacy ``{"event": ...}`` wire format, an in-memory
+  list for tests). Counters (guard skips, escalations, checkpoint
+  fallbacks, NS kernel launches) accumulate on the bus and ride out in the
+  ``run_end`` record.
+* :mod:`repro.obs.spans` — host-side span timers (step / checkpoint-save /
+  resume, nested with parent attribution) plus the ``jax.named_scope``
+  stage annotations the shard_map engine wraps around each
+  :class:`~repro.core.program.PipelineStage`, so a captured profiler trace
+  reads against ``UpdateProgram.summary()``.
+* :mod:`repro.obs.drift` — the plan-vs-runtime drift monitor: joins
+  ``CommPlan.predicted_by_link`` (and, when available, the pipeline
+  schedule's exposed bytes) against measured block/full step wall times,
+  derives achieved bytes/s per link class, and emits a ``drift`` event
+  when the modeled rate constants (``plan.MODELED_LINK_BYTES_PER_S``)
+  disagree with observation beyond a threshold.
+
+``scripts/obs_report.py`` aggregates a run's JSONL into percentiles,
+per-phase breakdowns, comm-rate summaries, and an incident timeline.
+Schema + flag documentation: docs/observability.md.
+"""
+
+from repro.obs.bus import (  # noqa: F401
+    Bus,
+    EVENT_FIELDS,
+    JsonlSink,
+    MemorySink,
+    QUIET_EVENTS,
+    StdoutSink,
+    event_type,
+    get_bus,
+    set_bus,
+    validate_record,
+)
+from repro.obs.drift import DriftConfig, DriftMonitor, exposed_by_link  # noqa: F401
+from repro.obs.spans import (  # noqa: F401
+    Span,
+    percentiles,
+    span,
+    stage_scope,
+)

@@ -1,0 +1,191 @@
+"""Plan-vs-runtime drift monitor.
+
+The comm model prices every planned collective with the rate constants in
+``plan.MODELED_LINK_BYTES_PER_S`` — numbers the ROADMAP flags as
+uncalibrated against real hardware. This module turns that calibration
+into a standing runtime report: it joins the plan's predicted bytes per
+link class against *measured* step wall times and emits a ``drift`` event
+when model and reality disagree beyond a threshold.
+
+The join exploits MuonBP's own structure. Block steps pay **zero**
+optimizer collectives beyond the apply-phase baseline, full steps
+additionally pay the momentum gathers — and both phases run the same
+forward/backward. So the EMA of block-step wall time is a compute
+baseline, and::
+
+    measured_extra = EMA(full wall) - EMA(block wall)
+
+is the wall cost of exactly the comm the plan prices, with no profiler
+needed. The modeled counterpart is ``sum_link bytes[link] / rate[link]``
+where ``bytes`` is the caller's full-minus-block delta per link
+(apply-phase collectives cancel in the difference). For pipelined
+schedules, feed :func:`exposed_by_link` of the compiled
+:class:`~repro.core.program.PipelineSchedule` instead — only *exposed*
+bytes cost wall time.
+
+From one scalar measurement the monitor cannot apportion blame across
+links, so achieved rates scale all links by the common factor
+``modeled_extra / measured_extra``; with a single link class present (the
+usual single-pod case) that IS the achieved rate of that link.
+
+When the modeled extra time is negligible (1-device runs, tiny configs,
+host simulation) the monitor stays silent by construction — there is
+nothing measurable to disagree about.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Optional
+
+from repro.distributed.plan import MODELED_LINK_BYTES_PER_S
+from repro.obs import bus as bus_lib
+
+
+def exposed_by_link(schedule) -> dict[str, int]:
+    """Per-link *exposed* gather bytes of a compiled PipelineSchedule.
+
+    The schedule tracks total and inter-pod (DCN) exposure; ICI is the
+    remainder. Use this as the ``comm_bytes_by_link`` input when the full
+    phase runs pipelined — barrier schedules expose everything, so there
+    the plain ``CommPlan.predicted_by_link`` delta is already exact.
+    """
+    dcn = int(schedule.exposed_dcn_bytes)
+    return {"ici": int(schedule.exposed_bytes) - dcn, "dcn": dcn}
+
+
+@dataclass
+class DriftConfig:
+    threshold: float = 2.0         # fire when measured/modeled leaves [1/t, t]
+    ema_beta: float = 0.7          # weight on history per observation
+    warmup: int = 2                # min observations of EACH phase before judging
+    min_modeled_s: float = 1e-3    # below this modeled extra, stay silent
+    cooldown: int = 5              # full-step observations between drift events
+
+
+@dataclass
+class DriftMonitor:
+    """EMA-based comparison of modeled vs measured full-step comm cost.
+
+    Feed one ``observe(step, phase, wall_s)`` per training step with the
+    host-measured wall time (use ``--obs-block`` so device completion is
+    included — otherwise dispatch-only times understate both phases
+    equally and the delta is noise). Emits at most one ``drift`` event per
+    ``cooldown`` full-step observations; ``report()`` emits a
+    ``comm_rates`` summary regardless of drift.
+    """
+
+    comm_bytes_by_link: Mapping[str, int]
+    rates: Mapping[str, float] = field(default_factory=lambda: dict(MODELED_LINK_BYTES_PER_S))
+    cfg: DriftConfig = field(default_factory=DriftConfig)
+    bus: Optional[bus_lib.Bus] = None
+
+    block_ema: Optional[float] = None
+    full_ema: Optional[float] = None
+    block_n: int = 0
+    full_n: int = 0
+    drift_events: int = 0
+    _since_drift: int = 0
+
+    @property
+    def modeled_extra_s(self) -> float:
+        return sum(
+            int(b) / float(self.rates[link])
+            for link, b in self.comm_bytes_by_link.items()
+            if int(b) > 0 and float(self.rates.get(link, 0.0)) > 0.0
+        )
+
+    def _update_ema(self, prev: Optional[float], x: float) -> float:
+        if prev is None:
+            return x
+        beta = self.cfg.ema_beta
+        return beta * prev + (1.0 - beta) * x
+
+    def observe(self, step: int, phase: str, wall_s: float) -> Optional[dict]:
+        """Record one step's wall time; returns the drift record if fired."""
+        wall_s = float(wall_s)
+        if phase == "block":
+            self.block_ema = self._update_ema(self.block_ema, wall_s)
+            self.block_n += 1
+            return None
+        if phase != "full":
+            return None
+        self.full_ema = self._update_ema(self.full_ema, wall_s)
+        self.full_n += 1
+        self._since_drift += 1
+
+        modeled = self.modeled_extra_s
+        if modeled < self.cfg.min_modeled_s:
+            return None
+        if self.block_n < self.cfg.warmup or self.full_n < self.cfg.warmup:
+            return None
+        measured = self.measured_extra_s
+        if measured is None:
+            return None
+        # Clamp to a floor so "comm fully hidden" reads as a large speedup
+        # ratio rather than a divide-by-zero.
+        ratio = max(measured, 1e-9) / modeled
+        t = self.cfg.threshold
+        if 1.0 / t <= ratio <= t:
+            return None
+        if self._since_drift <= self.cfg.cooldown and self.drift_events > 0:
+            return None
+        self.drift_events += 1
+        self._since_drift = 0
+        rec = {
+            "event": "drift",
+            "step": int(step),
+            "ratio": round(ratio, 4),
+            "measured_extra_s": round(measured, 6),
+            "modeled_extra_s": round(modeled, 6),
+            "achieved_bytes_per_s": self.achieved_rates(),
+            "modeled_bytes_per_s": {k: float(v) for k, v in self.rates.items()},
+        }
+        if self.bus is not None:
+            self.bus.emit(rec)
+        return rec
+
+    @property
+    def measured_extra_s(self) -> Optional[float]:
+        if self.block_ema is None or self.full_ema is None:
+            return None
+        return self.full_ema - self.block_ema
+
+    def achieved_rates(self) -> dict[str, float]:
+        """Per-link achieved bytes/s implied by the measured extra time.
+
+        All links scale by the common factor modeled/measured (one scalar
+        measurement can't separate them); links with zero planned bytes
+        are omitted.
+        """
+        measured = self.measured_extra_s
+        modeled = self.modeled_extra_s
+        out: dict[str, float] = {}
+        if measured is None or modeled <= 0.0:
+            return out
+        scale = modeled / max(measured, 1e-9)
+        for link, b in self.comm_bytes_by_link.items():
+            if int(b) > 0:
+                out[link] = round(float(self.rates[link]) * scale, 1)
+        return out
+
+    def report(self, bus: Optional[bus_lib.Bus] = None) -> dict:
+        """Emit and return the ``comm_rates`` summary record."""
+        measured = self.measured_extra_s
+        rec = {
+            "event": "comm_rates",
+            "modeled_bytes_per_s": {k: float(v) for k, v in self.rates.items()},
+            "achieved_bytes_per_s": self.achieved_rates(),
+            "comm_bytes_by_link": {k: int(v) for k, v in self.comm_bytes_by_link.items()},
+            "modeled_extra_s": round(self.modeled_extra_s, 6),
+            "measured_extra_s": None if measured is None else round(measured, 6),
+            "block_ema_s": None if self.block_ema is None else round(self.block_ema, 6),
+            "full_ema_s": None if self.full_ema is None else round(self.full_ema, 6),
+            "block_n": self.block_n,
+            "full_n": self.full_n,
+            "drift_events": self.drift_events,
+        }
+        target = bus if bus is not None else self.bus
+        if target is not None:
+            target.emit(rec)
+        return rec
