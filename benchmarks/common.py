@@ -53,6 +53,24 @@ def timeit_stats(fn, *args, warmup: int = 2, iters: int = 5, bus=None,
     }
 
 
+def one_device_engine(params):
+    """shard_map engine over a 1-device ('data','model') mesh.
+
+    Every gather is a no-op (axis size 1), so a staggered-schedule
+    optimizer built on it is numerically an A/B of the *schedule* alone —
+    exactly what the loss benchmarks need to compare synchronous vs
+    staggered at matched periods and stepsizes.
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import make_engine
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pspecs = jax.tree.map(lambda p: P(*([None] * p.ndim)), params)
+    return make_engine(params, pspecs, mesh)
+
+
 COLUMNS = (
     "name", "us_per_call", "derived", "backend", "bucketing",
     "engine", "predicted_bytes", "measured_collectives", "schedule",

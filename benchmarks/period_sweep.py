@@ -1,5 +1,10 @@
 """Paper Figure 1 analogue: validation loss vs orthogonalization period P,
-for two blocking degrees (the paper's TP-degree axis)."""
+for two blocking degrees (the paper's TP-degree axis).
+
+A ``schedule`` axis rides along: for P in {2, 5} each degree is re-run
+under ``--full-schedule staggered`` (1-device shard_map engine — gathers
+are no-ops, so the row isolates the schedule's effect on loss and adds a
+per-step cost sample for the mixed-phase programs)."""
 
 from __future__ import annotations
 
@@ -8,11 +13,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row
+from benchmarks.common import one_device_engine, row
 from repro.configs import get_config
 from repro.core import adamw, combine, label_tree, muon
 from repro.core.blocking import BlockSpec2D
-from repro.core.muon import phase_for_step
+from repro.core.muon import StaggerSchedule, phase_for_step
 from repro.data.pipeline import SyntheticLM
 from repro.models.model import init_params, loss_fn
 from repro.models.transformer import ShardCtx
@@ -33,27 +38,48 @@ def run(quick: bool = False, steps: int = 80) -> list[str]:
         steps = 25
     cfg = get_config("muonbp-960m").reduced()
     rows = []
+    # (period, staggered) axis: every period synchronous, plus staggered
+    # re-runs for the two mid-range periods (each one compiles `period`
+    # mixed-phase variants, so the staggered axis stays small on CPU).
+    sweep = [(p, False) for p in (1, 2, 5, 10, None)]
+    sweep += [(p, True) for p in (2, 5)]
     for degree in (2, 8):
-        for period in (1, 2, 5, 10, None):
+        for period, staggered in sweep:
             params = init_params(jax.random.PRNGKey(0), cfg)
             labels = label_tree(params)
             opt = combine(
                 {
-                    "muon": muon(0.02, 0.02, period=period, block_specs=_blocks(params, degree)),
+                    "muon": muon(
+                        0.02, 0.02, period=period,
+                        block_specs=_blocks(params, degree),
+                        comm=one_device_engine(params) if staggered else None,
+                        full_schedule="staggered" if staggered else None,
+                    ),
                     "adamw": adamw(0.008),
                 },
                 labels,
             )
             state = init_train_state(params, opt)
-            fns = make_train_step_fns(cfg, opt, ShardCtx(), donate=False)
+            if staggered:
+                sched = StaggerSchedule(period, "staggered")
+                fns = make_train_step_fns(cfg, opt, ShardCtx(), donate=False,
+                                          phases=sched.phases())
+                pick = sched.phase_for
+            else:
+                fns = make_train_step_fns(cfg, opt, ShardCtx(), donate=False)
+                pick = lambda t: phase_for_step(t, period)
             pipe = iter(SyntheticLM(cfg, 8, 64, seed=0))
             t0 = time.time()
             for t in range(steps):
                 b = {k: jnp.asarray(v) for k, v in next(pipe).items()}
-                state, m = fns[phase_for_step(t, period)](state, b)
+                state, m = fns[pick(t)](state, b)
             vb = {k: jnp.asarray(v) for k, v in next(iter(SyntheticLM(cfg, 8, 64, seed=99))).items()}
             val = float(loss_fn(state.params, vb, cfg)[0])
             us = (time.time() - t0) / steps * 1e6
             pname = "inf" if period is None else str(period)
-            rows.append(row(f"period_sweep_deg{degree}_P{pname}", us, f"val={val:.3f}"))
+            name = f"period_sweep_deg{degree}_P{pname}"
+            if staggered:
+                name += "_staggered"
+            rows.append(row(name, us, f"val={val:.3f}",
+                            schedule="staggered" if staggered else "-"))
     return rows

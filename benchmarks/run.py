@@ -13,13 +13,16 @@ for the paper artifact it reproduces):
   two_stepsize   — Theorem 2: tied vs untied stepsizes
   roofline       — Sec Roofline: terms per (arch x shape x mesh) from dryrun
 
-A ``--quick`` pass over the full module list also writes a ``BENCH_pr7.json``
+A ``--quick`` pass over the full module list also writes a ``BENCH_pr8.json``
 perf snapshot (rows + computed regression markers) so the repo carries a
 bench trajectory; ``scripts/ci.sh`` fails when any *tracked* ``BENCH_*.json``
-carries a non-empty ``regressions`` list. ``--bench-json PATH`` overrides
-the snapshot path (pass ``''`` to disable). Timing rows carry span-layer
-``p50_us``/``p95_us`` percentiles (``common.timeit_stats``) where the
-module measures wall time.
+carries a non-empty ``regressions`` list. Markers now also compare byte
+columns against the previous snapshot (``BENCH_pr7.json``) — a row present
+in both passes must not move more collective bytes than before — and flag
+``DEGRADED`` derived rows (the staggered-vs-synchronous convergence A/B).
+``--bench-json PATH`` overrides the snapshot path (pass ``''`` to
+disable). Timing rows carry span-layer ``p50_us``/``p95_us`` percentiles
+(``common.timeit_stats``) where the module measures wall time.
 
 Env: REPRO_BENCH_QUICK=1 (or ``--quick``) for a fast pass;
 REPRO_BENCH_ONLY=mod1,mod2 (or ``--only mod1,mod2``) to filter.
@@ -48,7 +51,8 @@ MODULES = [
     "roofline",
 ]
 
-BENCH_SNAPSHOT = "BENCH_pr7.json"
+BENCH_SNAPSHOT = "BENCH_pr8.json"
+BASELINE_SNAPSHOT = "BENCH_pr7.json"  # previous PR's tracked snapshot
 
 
 def parse_rows(lines: list[str]) -> list[dict]:
@@ -71,7 +75,9 @@ def find_regressions(rows: list[dict]) -> list[str]:
         ``<n>B`` column) disagree with ``predicted_bytes`` — the engine's
         schedule is specified to match CommPlan *exactly*;
       * a pipelined full step moving more bytes than its barrier A/B —
-        the pipeline must reorder communication, never add to it.
+        the pipeline must reorder communication, never add to it;
+      * a ``DEGRADED`` derived row — currently the staggered-vs-synchronous
+        convergence A/B in ``benchmarks/convergence.py``.
     """
     regs: list[str] = []
     by_sched: dict[tuple, dict[str, int]] = {}
@@ -81,6 +87,8 @@ def find_regressions(rows: list[dict]) -> list[str]:
             regs.append(f"{name}: module error")
             continue
         derived = r.get("derived", "-")
+        if "DEGRADED" in derived:
+            regs.append(f"{name}: {derived}")
         if (r.get("engine") == "shard_map" and r.get("predicted_bytes", "-") != "-"
                 and derived.endswith("B") and derived[:-1].isdigit()):
             measured, predicted = int(derived[:-1]), int(r["predicted_bytes"])
@@ -101,14 +109,53 @@ def find_regressions(rows: list[dict]) -> list[str]:
     return regs
 
 
+def baseline_regressions(rows: list[dict], baseline_path: str) -> list[str]:
+    """Byte-level markers vs the previous PR's tracked snapshot.
+
+    Timing is CPU-noisy, so only the deterministic columns gate: a row
+    present in both passes must not *measure* more collective bytes
+    (``derived`` ``<n>B``) or *predict* more plan bytes than the baseline.
+    Missing baseline file or rows are fine — new rows have no baseline.
+    """
+    if not os.path.exists(baseline_path):
+        return []
+    with open(baseline_path) as f:
+        base = {r["name"]: r for r in json.load(f).get("rows", [])}
+
+    def _bytes(r: dict) -> dict[str, int]:
+        out = {}
+        derived = r.get("derived", "-")
+        if derived.endswith("B") and derived[:-1].isdigit():
+            out["measured"] = int(derived[:-1])
+        pred = r.get("predicted_bytes", "-")
+        if pred not in ("-", None) and str(pred).isdigit():
+            out["predicted"] = int(pred)
+        return out
+
+    regs: list[str] = []
+    for r in rows:
+        b = base.get(r["name"])
+        if b is None:
+            continue
+        now, before = _bytes(r), _bytes(b)
+        for col in ("measured", "predicted"):
+            if col in now and col in before and now[col] > before[col]:
+                regs.append(
+                    f"{r['name']}: {col} bytes grew {before[col]} -> "
+                    f"{now[col]} vs {os.path.basename(baseline_path)}"
+                )
+    return regs
+
+
 def write_snapshot(path: str, rows: list[dict], quick: bool) -> None:
+    baseline = os.path.join(os.path.dirname(__file__), "..", BASELINE_SNAPSHOT)
     snap = {
         "schema": 1,
-        "pr": 7,
+        "pr": 8,
         "quick": quick,
         "columns": list(COLUMNS),
         "rows": rows,
-        "regressions": find_regressions(rows),
+        "regressions": find_regressions(rows) + baseline_regressions(rows, baseline),
     }
     with open(path, "w") as f:
         json.dump(snap, f, indent=1)
@@ -123,7 +170,7 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated module list")
     ap.add_argument("--bench-json", default=None,
                     help="write a JSON snapshot of the rows + regression "
-                         "markers ('' disables; default: BENCH_pr7.json on a "
+                         "markers ('' disables; default: BENCH_pr8.json on a "
                          "full --quick pass)")
     args = ap.parse_args()
     quick = args.quick or os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")

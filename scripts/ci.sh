@@ -101,6 +101,27 @@ python -m repro.launch.train \
 python scripts/obs_report.py /tmp/repro_obs/run.jsonl \
     --strict --require-phase-spans --require-zero-drift
 
+echo "== staggered-schedule smoke (8 host devices) =="
+# --full-schedule staggered on the (2,2,2) hierarchical mesh: 6 steps at
+# period 3 visit every step-residue twice, each compiling its own mixed
+# phase (stagger:0..2). The report must parse the schedule/residue
+# telemetry cleanly and see >=1 step span per stagger:<r> phase. Forced
+# host devices make wall time meaningless, so the drift monitor is off
+# (--drift-threshold 0); schedule *numerics* (staggered == synchronous
+# after one period, per-residue plan-exact HLO bytes) are gated by
+# tests/test_stagger.py in the tier-1/slow passes.
+rm -rf /tmp/repro_stagger
+XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m repro.launch.train \
+    --arch granite-8b --reduced --steps 6 --batch 4 --seq 32 --period 3 \
+    --mesh pod=2,data=2,model=2 --comm-engine shard_map --full-schedule staggered \
+    --drift-threshold 0 --log-every 1 --obs-block \
+    --log-file /tmp/repro_stagger/run.jsonl
+python scripts/obs_report.py /tmp/repro_stagger/run.jsonl \
+    --strict --require-phase-spans --require-zero-drift
+
+echo "== staggered parity + per-residue HLO audit (8 host devices, slow) =="
+python -m pytest -q tests/test_stagger.py -m slow
+
 echo "== docs flag coverage =="
 # Every train.py/perf.py/dryrun.py CLI flag must appear in the operator guide.
 python scripts/check_docs.py

@@ -10,8 +10,9 @@ in the incident timeline.
 Sections:
 
 * **step times** — p50/p95/p99 wall-time percentiles from ``step`` span
-  records, overall and per MuonBP phase (block vs full), plus span
-  breakdowns for checkpoint.save / resume.
+  records, overall and per MuonBP phase (block vs full; per step-residue
+  too on ``--full-schedule staggered`` runs), plus span breakdowns for
+  checkpoint.save / resume.
 * **comm drift** — the last ``comm_rates`` summary (modeled vs achieved
   bytes/s per link class) and every ``drift`` event.
 * **counters** — merged from ``run_end`` records (guard skips,
@@ -58,6 +59,15 @@ def step_time_section(records: list[dict]) -> list[str]:
         by_phase.setdefault(str(r.get("phase", "?")), []).append(r["dur_s"])
     groups = [("all", [r["dur_s"] for r in steps])]
     groups += sorted(by_phase.items())
+    # Under --full-schedule staggered the phase IS the step-residue, and
+    # the interesting question becomes whether step time is flat across
+    # residues — break the percentiles down per residue.
+    if any(str(r.get("phase", "")).startswith("stagger:") for r in steps):
+        by_residue: dict[int, list[float]] = {}
+        for r in steps:
+            if "residue" in r:
+                by_residue.setdefault(int(r["residue"]), []).append(r["dur_s"])
+        groups += [(f"r={res}", vals) for res, vals in sorted(by_residue.items())]
     for name, vals in groups:
         p = percentiles(vals)
         lines.append(
@@ -96,12 +106,27 @@ def drift_section(records: list[dict]) -> tuple[list[str], int]:
                 f"{last['modeled_extra_s'] * 1e3:.2f}ms "
                 f"(block n={last.get('block_n')}, full n={last.get('full_n')})"
             )
+        if last.get("modeled_s_by_residue") is not None:
+            # Staggered-schedule summary (ResidueDriftMonitor): per-residue
+            # modeled comm time and measured wall EMA.
+            emas = last.get("ema_s_by_residue") or {}
+            base = last.get("baseline_residue")
+            for res, modeled_s in enumerate(last["modeled_s_by_residue"]):
+                ema = emas.get(str(res))
+                lines.append(
+                    f"residue {res}{' (baseline)' if res == base else ''}: "
+                    f"modeled comm {modeled_s * 1e3:.2f}ms"
+                    + (f", wall EMA {ema * 1e3:.2f}ms" if ema is not None
+                       else ", no steps observed")
+                )
     else:
         lines.append("no comm_rates summary recorded")
     lines.append(f"drift events: {len(drifts)}")
     for r in drifts:
+        where = (f" [residue {r['residue']}]" if "residue" in r else "")
         lines.append(
-            f"  step {r.get('step')}: measured/modeled ratio {r.get('ratio')} "
+            f"  step {r.get('step')}{where}: measured/modeled ratio "
+            f"{r.get('ratio')} "
             f"({r.get('measured_extra_s')}s vs {r.get('modeled_extra_s')}s)"
         )
     return lines, len(drifts)

@@ -126,15 +126,18 @@ class NSEngineConfig:
     leaf); ``full_schedule`` picks the engine-mode full-step execution
     schedule ("pipelined": per-bucket gathers overlapped with the NS of
     already-resident buckets, the default; "barrier": the gather-all /
-    NS-all / slice-all A/B, also what GSPMD-mode programs always do). Env
-    overrides: ``REPRO_NS_BACKEND``, ``REPRO_NS_STRATEGY``,
+    NS-all / slice-all A/B, also what GSPMD-mode programs always do;
+    "staggered": each bucket goes full on its own step-residue — one
+    mixed-phase program per residue, flattening the p-step DCN burst into
+    a per-step trickle; requires the shard_map engine and a period >= 2).
+    Env overrides: ``REPRO_NS_BACKEND``, ``REPRO_NS_STRATEGY``,
     ``REPRO_NS_BUCKETING=0``, ``REPRO_FULL_SCHEDULE``.
     """
 
     backend: str = "jnp"          # "jnp" | "pallas"
     strategy: str = "auto"        # "auto" | "jnp" | "fused_chain" | "fused_iter" | "tiled"
     bucketing: bool = True
-    full_schedule: str = "pipelined"  # "pipelined" | "barrier"
+    full_schedule: str = "pipelined"  # "pipelined" | "barrier" | "staggered"
 
     @classmethod
     def from_env(cls) -> "NSEngineConfig":

@@ -83,6 +83,52 @@ def phase_for_step(step: int, period: Optional[int]) -> str:
     return "full" if step % period == 0 else "block"
 
 
+@dataclasses.dataclass(frozen=True)
+class StaggerSchedule:
+    """Which compiled phase each training step runs.
+
+    Replaces the scalar ``phase_for_step`` as the launcher-facing schedule
+    object. ``mode='synchronous'`` is the paper's Algorithm 1 — every
+    leaf goes full together on steps where ``step % P == 0``.
+    ``mode='staggered'`` maps step t to the mixed phase
+    ``"stagger:{t % P}"``: each muon leaf carries a residue offset (see
+    ``program.UpdateProgram.stagger_offsets``) and goes full only on its
+    own residue, so every step moves ~1/P of the full-step bytes instead
+    of one step in P moving all of them. Over any P consecutive steps each
+    leaf still gets exactly P-1 block updates and 1 full update (at its
+    full-step LR), the same per-leaf work as the synchronous schedule
+    reordered in time.
+    """
+
+    period: Optional[int]
+    mode: str = "synchronous"   # 'synchronous' | 'staggered'
+
+    def __post_init__(self):
+        if self.mode not in ("synchronous", "staggered"):
+            raise ValueError(
+                f"mode must be 'synchronous' or 'staggered', got {self.mode!r}"
+            )
+        if self.mode == "staggered" and (self.period is None or self.period < 2):
+            raise ValueError(
+                f"staggered schedule needs period >= 2, got {self.period!r}"
+            )
+
+    def phase_for(self, step: int) -> str:
+        if self.mode == "synchronous":
+            return phase_for_step(step, self.period)
+        return program_lib.stagger_phase(step % self.period)
+
+    def phases(self) -> tuple[str, ...]:
+        """All phase names this schedule can emit (what the launcher compiles)."""
+        if self.mode == "staggered":
+            return tuple(program_lib.stagger_phase(r) for r in range(self.period))
+        if self.period is None:
+            return ("block",)
+        if self.period <= 1:
+            return ("full",)
+        return ("block", "full")
+
+
 def _as_schedule(lr) -> Schedule:
     if callable(lr):
         return lr
@@ -162,8 +208,13 @@ def muon(
         ``'pipelined'`` (the default) compiles per-bucket gathers
         overlapped with the NS of already-resident buckets
         (double-buffered); ``'barrier'`` keeps the gather-all/NS-all/
-        slice-all body for A/Bs. ``None`` reads ``REPRO_FULL_SCHEDULE``
-        and falls back to ``'pipelined'``. GSPMD programs ignore it.
+        slice-all body for A/Bs; ``'staggered'`` (needs ``comm=`` and
+        ``period >= 2``) additionally compiles one mixed phase per
+        step-residue — drive ``update`` with
+        ``StaggerSchedule(period, 'staggered').phase_for(step)`` so each
+        leaf goes full on its own offset and every step moves ~1/P of the
+        full-step bytes. ``None`` reads ``REPRO_FULL_SCHEDULE`` and falls
+        back to ``'pipelined'``. GSPMD programs ignore it.
     """
     lr_full_fn = _as_schedule(lr_full)
     lr_block_fn = _as_schedule(lr_block if lr_block is not None else lr_full)
@@ -177,6 +228,16 @@ def muon(
             f"full_schedule must be one of {program_lib.FULL_SCHEDULES}, "
             f"got {full_schedule!r}"
         )
+    if full_schedule == "staggered":
+        if comm is None:
+            raise ValueError(
+                "full_schedule='staggered' needs comm= (the shard_map "
+                "engine); GSPMD mode has no per-leaf gathers to stagger"
+            )
+        if period is None or period < 2:
+            raise ValueError(
+                f"full_schedule='staggered' needs period >= 2, got {period!r}"
+            )
 
     # Path-keyed block-spec lookup: robust to masked (None-leaf) param trees
     # from `combine` even when block_specs covers all leaves.
@@ -206,6 +267,7 @@ def muon(
                 layer_shard=layer_shard,
                 full_schedule=full_schedule,
                 ns_steps=ns_steps,
+                stagger_period=period if full_schedule == "staggered" else None,
             )
         return programs[cache_key]
 
@@ -250,10 +312,25 @@ def muon(
         )
 
     def update(grads: PyTree, state: OptState, params: PyTree, phase: str = "block"):
-        if phase not in ("block", "full"):
-            raise ValueError(f"phase must be 'block' or 'full', got {phase!r}")
+        residue = program_lib.parse_stagger_phase(phase)
+        if residue is not None:
+            if full_schedule != "staggered":
+                raise ValueError(
+                    f"phase {phase!r} needs full_schedule='staggered', "
+                    f"this optimizer compiled {full_schedule!r}"
+                )
+            if residue >= period:
+                raise ValueError(
+                    f"phase {phase!r} out of range for period {period}"
+                )
+        elif phase not in ("block", "full"):
+            raise ValueError(
+                f"phase must be 'block', 'full' or 'stagger:<r>', got {phase!r}"
+            )
         count = state.count + 1
-        lr = lr_full_fn(count) if phase == "full" else lr_block_fn(count)
+        lr_f = lr_full_fn(count)
+        lr_b = lr_block_fn(count)
+        lr = lr_f if phase == "full" else lr_b
 
         # ---- prologue: flat leaves + NS inputs -------------------------
         # Gradient leaves are zero-padded on the lead dim where the state
@@ -292,14 +369,21 @@ def muon(
         o_leaves = program.execute(phase, u_leaves, _orth)
 
         # ---- epilogue: RMS-matched scaling + weight decay + repack ----
+        # Two-stepsize rule per leaf (Theorem 2): on a mixed staggered
+        # phase the due leaves take the full-step LR (they were fully
+        # orthogonalized, eff_dims = global dims) and everyone else the
+        # block LR — each leaf sees lr_full exactly once per period, same
+        # as the synchronous schedule, just offset in time.
         prog_phase = program.phase(phase)
+        due = frozenset(prog_phase.due or ())
         upd_leaves = []
         for i, (o, p) in enumerate(zip(o_leaves, p_leaves)):
             m_eff, n_eff = prog_phase.eff_dims(i)
             scale = _rms_scale(m_eff, n_eff, rms_target) if rms_match else 1.0
-            upd = -lr * scale * o
+            lr_i = lr_f if i in due else lr
+            upd = -lr_i * scale * o
             if weight_decay:
-                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+                upd = upd - lr_i * weight_decay * p.astype(jnp.float32)
             upd_leaves.append(upd.astype(p.dtype))
         updates = jax.tree_util.tree_unflatten(treedef, upd_leaves)
         return updates, OptState(momentum=new_m, count=count)

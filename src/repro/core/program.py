@@ -89,8 +89,33 @@ FP32_BYTES = 4  # NS inputs are fp32 (momentum dtype) — plan.py convention
 
 # Full-phase execution schedules (engine mode): 'barrier' gathers every
 # leaf, runs every bucket, slices everything back; 'pipelined' overlaps
-# per-bucket gathers with the NS of already-resident buckets.
-FULL_SCHEDULES = ("barrier", "pipelined")
+# per-bucket gathers with the NS of already-resident buckets; 'staggered'
+# additionally compiles one mixed phase per step-residue ("stagger:r") in
+# which only the leaves due at that residue run their full-step gathers
+# (offsets balanced by per-step DCN bytes) while the rest run block ops —
+# the p-step DCN burst flattened into a per-step trickle.
+FULL_SCHEDULES = ("barrier", "pipelined", "staggered")
+
+# Phase-name convention for the staggered schedule: residue r executes the
+# compiled phase "stagger:r". ``muon.update`` accepts these alongside
+# 'block'/'full'; the plain 'full' phase is still compiled (the resilience
+# ladder's forced-full escalation needs it).
+STAGGER_PREFIX = "stagger:"
+
+
+def stagger_phase(residue: int) -> str:
+    """Phase name of one staggered step-residue ("stagger:3")."""
+    return f"{STAGGER_PREFIX}{int(residue)}"
+
+
+def parse_stagger_phase(phase: str) -> Optional[int]:
+    """Residue of a "stagger:r" phase name, or None for any other phase."""
+    if isinstance(phase, str) and phase.startswith(STAGGER_PREFIX):
+        tail = phase[len(STAGGER_PREFIX):]
+        if tail.isdigit():
+            return int(tail)
+    return None
+
 
 __all__ = [
     "LeafSpec",
@@ -103,6 +128,9 @@ __all__ = [
     "PhaseProgram",
     "UpdateProgram",
     "FULL_SCHEDULES",
+    "STAGGER_PREFIX",
+    "stagger_phase",
+    "parse_stagger_phase",
     "compile_program",
     "execute_ops",
     "execute_op",
@@ -351,6 +379,13 @@ class PhaseProgram:
     leaf_execs: tuple[LeafExec, ...]        # index order == muon leaf order
     ops: tuple[BucketOp, ...]
     schedule: Optional[PipelineSchedule] = None   # engine-mode pipelined fulls
+    # Staggered phases only: flat indices of the leaves whose residue is due
+    # this step — they pay their full-step gathers AND take the full-step
+    # stepsize (the two-stepsize rule applied per leaf). Unblocked sharded
+    # leaves gather every phase regardless but are 'due' (full LR) only at
+    # their own residue, so every leaf sees full LR exactly once per period
+    # under either schedule.
+    due: Optional[tuple[int, ...]] = None
 
     def predicted_comm_bytes(self) -> int:
         """Predicted collective bytes/step (plan.py result-buffer convention).
@@ -381,9 +416,11 @@ class UpdateProgram:
     """The compiled two-phase update schedule; ``execute`` interprets it."""
 
     leaf_specs: tuple[LeafSpec, ...]
-    phases: dict                            # 'block'/'full' -> PhaseProgram
+    phases: dict                            # 'block'/'full'/'stagger:r' -> PhaseProgram
     engine: Optional[Any] = None            # ShardMapEngine (duck-typed)
     layer_shard: Optional[tuple] = None     # (mesh, axis) for layer_shard ops
+    stagger_period: Optional[int] = None    # staggered schedules only
+    stagger_offsets: Optional[dict] = None  # 'a/b/c' path -> residue in [0, p)
 
     def phase(self, name: str) -> PhaseProgram:
         return self.phases[name]
@@ -410,13 +447,13 @@ class UpdateProgram:
     def summary(self) -> str:
         """Human-readable program listing (for docs/debugging)."""
         lines = []
-        for name in ("block", "full"):
-            prog = self.phases[name]
+        for name, prog in self.phases.items():
             apply_b = prog.predicted_apply_bytes()
+            due = f" due={len(prog.due)} leaf/leaves" if prog.due is not None else ""
             lines.append(
                 f"{name}: {len(prog.ops)} bucket op(s), "
                 f"predicted comm {prog.predicted_comm_bytes()} B"
-                + (f" (+{apply_b} B zero1 apply)" if apply_b else "")
+                + (f" (+{apply_b} B zero1 apply)" if apply_b else "") + due
             )
             for op in prog.ops:
                 comm = op.comm.kind if op.comm else (
@@ -873,6 +910,7 @@ def _compile_phase_engine(
     layer_shard: Optional[tuple] = None,
     full_schedule: str = "pipelined",
     ns_steps: int = 5,
+    full_leaves: Optional[frozenset] = None,
 ) -> PhaseProgram:
     """Engine mode: plan on device-local (post-gather) shapes.
 
@@ -883,6 +921,13 @@ def _compile_phase_engine(
     the NS of already-resident buckets — and plans pipelined kernels
     against the reduced ``dispatch.pipeline_vmem_budget()`` so a stage's
     fused chain never crowds out the in-flight gather's double buffers.
+
+    ``full_leaves`` compiles a MIXED staggered phase ("stagger:r"): the
+    named leaf indices run their full-step path (gather + whole-matrix NS)
+    and everything else runs its block path, in ONE body with ONE pipeline
+    schedule spanning only the due buckets (block buckets are gather-free
+    and slot into the overlap bubbles). ``layer_shard`` folds stay a
+    synchronous-full-step feature and are not attached to mixed phases.
     """
     from repro.kernels import dispatch
     from repro.sharding.specs import local_shape, spec_entry_size
@@ -899,7 +944,8 @@ def _compile_phase_engine(
         shard_shape = local_shape(spec, ls.shape, sizes)
         m, n = int(ls.shape[-2]), int(ls.shape[-1])
         gather = None
-        if phase == "full" or not ls.blocked:
+        due = phase == "full" or (full_leaves is not None and i in full_leaves)
+        if due or not ls.blocked:
             # Gather the trailing dims back to global; lead dims stay local
             # (ZeRO-1 keeps each rank on its own layers).
             gather = _gather_comm(spec, ls.shape, sizes)
@@ -953,7 +999,14 @@ def _compile_phase_engine(
                      out_spec=out_spec, lead=lead)
         )
 
-    pipelined = phase == "full" and full_schedule == "pipelined"
+    # Mixed staggered phases always pipeline (the whole point is spanning
+    # the due buckets' gathers with the other buckets' NS); the plain full
+    # phase pipelines under 'pipelined' AND 'staggered' (the forced-full
+    # escalation step should not regress to a barrier).
+    pipelined = (
+        full_leaves is not None
+        or (phase == "full" and full_schedule in ("pipelined", "staggered"))
+    )
     vmem_budget = None
     if pipelined:
         # A DCN gather stays in flight ~8x longer than an ICI one, so its
@@ -991,6 +1044,7 @@ def _compile_phase_engine(
     return PhaseProgram(
         phase=phase, leaf_execs=tuple(leaf_execs), ops=tuple(ops),
         schedule=schedule,
+        due=tuple(sorted(full_leaves)) if full_leaves is not None else None,
     )
 
 
@@ -1004,6 +1058,7 @@ def compile_program(
     layer_shard: Optional[tuple] = None,
     full_schedule: str = "pipelined",
     ns_steps: int = 5,
+    stagger_period: Optional[int] = None,
 ) -> UpdateProgram:
     """Compile the two-phase :class:`UpdateProgram` from static leaf info.
 
@@ -1029,10 +1084,18 @@ def compile_program(
         full phase into a per-bucket :class:`PipelineSchedule` (gather
         bucket i+1 while orthogonalizing bucket i, double-buffered);
         ``'barrier'`` keeps the gather-all/NS-all/slice-all body as the
-        A/B. GSPMD programs have no explicit gathers to schedule and always
-        compile without one.
+        A/B. ``'staggered'`` (engine-only, needs ``stagger_period``)
+        additionally compiles one mixed phase per step-residue
+        ("stagger:0" .. "stagger:p-1") — leaf offsets balanced over the
+        residues by per-step DCN bytes via
+        ``plan.assign_stagger_offsets``, each residue's due leaves running
+        full ops and the rest block ops, in one pipelined body. GSPMD
+        programs have no explicit gathers to schedule and always compile
+        without one.
       ns_steps: chain length, used only to price the schedule's overlap
         windows (``plan.overlappable_ns_bytes``).
+      stagger_period: the MuonBP period p (>= 2) when
+        ``full_schedule='staggered'``; ignored otherwise.
     """
     if full_schedule not in FULL_SCHEDULES:
         raise ValueError(
@@ -1045,13 +1108,53 @@ def compile_program(
                 f"layer_shard axis {axis!r} not in engine mesh axes "
                 f"{tuple(dict(engine.axis_sizes))}"
             )
+    offsets: Optional[dict] = None
+    period: Optional[int] = None
+    if full_schedule == "staggered":
+        if engine is None:
+            raise ValueError(
+                "full_schedule='staggered' needs the shard_map engine "
+                "(GSPMD mode has no explicit per-leaf gathers to stagger)"
+            )
+        if stagger_period is None or int(stagger_period) < 2:
+            raise ValueError(
+                f"full_schedule='staggered' needs stagger_period >= 2, "
+                f"got {stagger_period!r}"
+            )
+        period = int(stagger_period)
+        from repro.distributed.plan import assign_stagger_offsets
+
+        sizes = dict(engine.axis_sizes)
+        items = []
+        for ls in leaf_specs:
+            comm = _gather_comm(
+                engine.spec_for(ls.key, len(ls.shape)), ls.shape, sizes
+            )
+            items.append((
+                "/".join(ls.key),
+                comm.predicted_link_bytes("dcn") if comm else 0,
+                comm.predicted_bytes if comm else 0,
+            ))
+        offsets = assign_stagger_offsets(items, period)
+
     phases = {}
-    for phase in ("block", "full"):
+    phase_names: list = ["block", "full"]
+    if period is not None:
+        phase_names += [stagger_phase(r) for r in range(period)]
+    for phase in phase_names:
+        residue = parse_stagger_phase(phase)
         if engine is not None:
+            full_leaves = None
+            if residue is not None:
+                full_leaves = frozenset(
+                    i for i, ls in enumerate(leaf_specs)
+                    if offsets["/".join(ls.key)] == residue
+                )
             phases[phase] = _compile_phase_engine(
                 leaf_specs, phase, bucketing=bucketing, backend=backend,
                 strategy=strategy, engine=engine, layer_shard=layer_shard,
                 full_schedule=full_schedule, ns_steps=ns_steps,
+                full_leaves=full_leaves,
             )
         else:
             phases[phase] = _compile_phase_gspmd(
@@ -1061,4 +1164,5 @@ def compile_program(
     return UpdateProgram(
         leaf_specs=tuple(leaf_specs), phases=phases, engine=engine,
         layer_shard=layer_shard,
+        stagger_period=period, stagger_offsets=offsets,
     )

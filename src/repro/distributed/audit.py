@@ -464,15 +464,49 @@ def assert_matches_plan_by_axes(result: AuditResult, plan: CommPlan, phases,
     for phase in phases:
         for axes, nbytes in plan.predicted_by_axes(phase).items():
             predicted[axes] = predicted.get(axes, 0) + nbytes
+    return _assert_axes_bytes_equal(result, predicted, mesh, ops,
+                                    label=f"phases {phases}")
+
+
+def _assert_axes_bytes_equal(result: AuditResult, predicted: dict, mesh,
+                             ops: tuple, *, label: str) -> dict:
     measured = bytes_by_axes(result, mesh, ops)
     pred = {k: v for k, v in predicted.items() if v}
     meas = {k: v for k, v in measured.items() if v}
     if pred != meas:
         raise AssertionError(
-            f"per-axis collective bytes mismatch for phases {phases}:\n"
+            f"per-axis collective bytes mismatch for {label}:\n"
             f"  plan: {pred}\n  hlo:  {meas}"
         )
     return measured
+
+
+def assert_staggered_matches_plan(result: AuditResult, plan: CommPlan, mesh,
+                                  *, period: int, residue: int,
+                                  include_apply: bool = False,
+                                  ops: tuple = ("all-gather",
+                                                "reduce-scatter",
+                                                "all-to-all")) -> dict:
+    """Exact per-axis comparison of ONE staggered residue vs the plan.
+
+    The compiled "stagger:r" body gathers exactly the leaves whose offset
+    is r (``plan.stagger_offsets(period)`` — the same greedy assignment
+    the program compiler ran), so the measured bytes must equal
+    ``plan.predicted_by_axes('staggered', period=, residue=)`` with zero
+    tolerance, per mesh-axis set. ``include_apply`` adds the 'apply'
+    phase (ZeRO-1 writeback gathers execute inside the body every step).
+    Returns the measured per-axes dict on success.
+    """
+    predicted: dict[tuple[str, ...], int] = dict(
+        plan.predicted_by_axes("staggered", period=period, residue=residue)
+    )
+    if include_apply:
+        for axes, nbytes in plan.predicted_by_axes("apply").items():
+            predicted[axes] = predicted.get(axes, 0) + nbytes
+    return _assert_axes_bytes_equal(
+        result, predicted, mesh, ops,
+        label=f"staggered residue {residue}/{period}",
+    )
 
 
 def attribute_gathers_to_stages(result: AuditResult, prog_phase,

@@ -253,8 +253,10 @@ class ShardMapEngine:
         # ops (HLO metadata / profiler TraceAnnotation rows keyed
         # ``muonbp.<phase>.s<stage>.<gather|ns|writeback>``), so a profiler
         # capture reads against PipelineSchedule.describe() stage indices
-        # while the compiled program stays bitwise-identical.
-        scope = prog.phase
+        # while the compiled program stays bitwise-identical. Staggered
+        # phase names carry a ':' ("stagger:3"), which named_scope rejects;
+        # the scope drops it ("stagger3").
+        scope = prog.phase.replace(":", "")
 
         def barrier_body(*xs):
             with jax.named_scope(f"muonbp.{scope}.gather"):

@@ -75,6 +75,16 @@ from repro.sharding.specs import spec_entry_size as _factor
 PHASES = ("block", "full", "apply")
 FP32_BYTES = 4
 
+# Virtual phase name for the staggered full-step schedule: each muon leaf
+# carries a residue offset in [0, period) and goes full only on steps where
+# ``step % period == offset``; every other step it runs its block phase.
+# Priced via ``CommPlan.predicted_bytes('staggered', period=, residue=)`` —
+# per leaf, the 'full' collectives iff the leaf is due at that residue,
+# else its 'block' collectives. Offsets come from
+# :func:`assign_stagger_offsets`, the same greedy balancer the program
+# compiler uses, so plan and executable agree leaf-for-leaf.
+STAGGERED = "staggered"
+
 # Modeled hardware ratios for pipeline-schedule pricing (program.py's
 # PipelineSchedule). ICI bandwidth matches benchmarks/comm_volume.py's
 # throughput model; the FLOP rate is one TPU core's MXU order of magnitude.
@@ -103,6 +113,42 @@ def link_class(axes) -> str:
     so one DCN axis makes the whole collective 'dcn'.
     """
     return "dcn" if any(a in DCN_AXES for a in axes) else "ici"
+
+
+def assign_stagger_offsets(
+    items, period: int
+) -> dict:
+    """Balance leaves across ``period`` step-residues by per-step DCN bytes.
+
+    THE single source of the stagger offset assignment — ``CommPlan``
+    pricing, the ``core/program.py`` compiler, and the run-metadata
+    snapshot all call this, so the plan, the compiled per-residue
+    programs, and the checkpointed schedule cannot disagree on which leaf
+    is due when. ``items`` are ``(key, dcn_bytes, total_bytes)`` triples
+    (one per leaf that participates in the stagger — muon matrices);
+    ``key`` is the canonical 'a/b/c' path string.
+
+    Greedy LPT on a lexicographic cost: leaves sorted by
+    ``(-dcn, -total, key)`` each go to the residue with the smallest
+    ``(dcn_load, total_load, count, residue)`` — largest inter-pod
+    gathers placed first, ICI bytes as tie-break, leaf count last so
+    zero-byte leaves still spread evenly. Deterministic by construction
+    (pure sort + argmin, no hashing), which is what makes the offsets
+    safe to persist in run metadata and compare bit-exactly on resume.
+    """
+    period = int(period)
+    if period < 2:
+        raise ValueError(f"stagger period must be >= 2, got {period}")
+    loads = [[0, 0, 0] for _ in range(period)]
+    offsets: dict = {}
+    for key, dcn, total in sorted(items, key=lambda t: (-t[1], -t[2], t[0])):
+        r = min(range(period),
+                key=lambda i: (loads[i][0], loads[i][1], loads[i][2], i))
+        offsets[key] = r
+        loads[r][0] += int(dcn)
+        loads[r][1] += int(total)
+        loads[r][2] += 1
+    return offsets
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,8 +197,66 @@ class CommPlan:
     axis_sizes: dict[str, int]
     leaves: tuple[LeafCommPlan, ...]
 
-    def predicted_bytes(self, phase: str, link: Optional[str] = None) -> int:
+    def stagger_leaves(self) -> tuple[LeafCommPlan, ...]:
+        """Leaves that participate in the staggered schedule (muon matrices)."""
+        return tuple(
+            leaf for leaf in self.leaves
+            if leaf.label == "muon" and len(leaf.shape) >= 2
+        )
+
+    def stagger_offsets(self, period: int) -> dict[str, int]:
+        """Per-leaf residue offsets (path -> r) balancing per-step DCN bytes.
+
+        Same items/keys/tie-breaks as the program compiler (both call
+        :func:`assign_stagger_offsets` over the muon matrices' full-step
+        gather bytes), so ``predicted_bytes('staggered', ...)`` prices the
+        exact program each residue executes.
+        """
+        return assign_stagger_offsets(
+            ((leaf.path, leaf.predicted_bytes("full", "dcn"),
+              leaf.predicted_bytes("full"))
+             for leaf in self.stagger_leaves()),
+            period,
+        )
+
+    def _staggered_leaf_phase(self, period: int, residue: int):
+        """Yield ``(leaf, phase)`` for one residue of the staggered schedule."""
+        if period is None:
+            raise ValueError("phase='staggered' requires period=")
+        residue = int(residue) % int(period)
+        offsets = self.stagger_offsets(period)
+        for leaf in self.leaves:
+            due = offsets.get(leaf.path) == residue
+            yield leaf, ("full" if due else "block")
+
+    def predicted_bytes(self, phase: str, link: Optional[str] = None, *,
+                        period: Optional[int] = None,
+                        residue: Optional[int] = None) -> int:
+        if phase == STAGGERED:
+            return sum(
+                leaf.predicted_bytes(ph, link)
+                for leaf, ph in self._staggered_leaf_phase(period, residue or 0)
+            )
         return sum(leaf.predicted_bytes(phase, link) for leaf in self.leaves)
+
+    def staggered_bytes_by_residue(
+        self, period: int, link: Optional[str] = None
+    ) -> tuple[int, ...]:
+        """Per-residue predicted bytes of one staggered step, r = 0..period-1."""
+        return tuple(
+            self.predicted_bytes(STAGGERED, link, period=period, residue=r)
+            for r in range(int(period))
+        )
+
+    def max_staggered_dcn_bytes(self, period: int) -> int:
+        """Max-over-residues exposed inter-pod bytes of one staggered step.
+
+        The headline stagger metric: the worst single step's DCN bill.
+        Balanced offsets make this ~``predicted_bytes('full', 'dcn') /
+        period`` (within one leaf of imbalance) instead of the synchronous
+        schedule's full bill every p-th step.
+        """
+        return max(self.staggered_bytes_by_residue(period, "dcn"))
 
     def predicted(self, phase: str) -> dict[str, dict[str, int]]:
         """Aggregate {op: {count, bytes}} — the shape parse_collectives emits."""
@@ -168,15 +272,24 @@ class CommPlan:
         """Bytes per modeled link class — {'ici': ..., 'dcn': ...}."""
         return {link: self.predicted_bytes(phase, link) for link in LINKS}
 
-    def predicted_by_axes(self, phase: str) -> dict[tuple[str, ...], int]:
+    def predicted_by_axes(self, phase: str, *,
+                          period: Optional[int] = None,
+                          residue: Optional[int] = None
+                          ) -> dict[tuple[str, ...], int]:
         """Bytes per (sorted) mesh-axis set a collective traverses.
 
         The same keying ``audit.bytes_by_axes`` derives from post-SPMD
         replica groups, so per-axis plan-vs-HLO comparison is direct.
+        ``phase='staggered'`` (with ``period=``/``residue=``) prices one
+        residue of the staggered schedule leaf-by-leaf.
         """
+        if phase == STAGGERED:
+            pairs = self._staggered_leaf_phase(period, residue or 0)
+        else:
+            pairs = ((leaf, phase) for leaf in self.leaves)
         out: dict[tuple[str, ...], int] = {}
-        for leaf in self.leaves:
-            for c in leaf.collectives(phase):
+        for leaf, ph in pairs:
+            for c in leaf.collectives(ph):
                 key = tuple(sorted(c.axes))
                 out[key] = out.get(key, 0) + c.bytes
         return out

@@ -166,7 +166,8 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
       zero1_flatten: bool   — ZeRO-1 flatten-and-shard fallback for
                               layer counts that don't divide the ZeRO axes
       full_schedule: str    — engine full-step schedule ('pipelined'
-                              default / 'barrier' A/B)
+                              default / 'barrier' A/B / 'staggered'
+                              per-residue mixed phases)
     """
     v = variant or {}
     if v.get("flash_block_k"):
@@ -373,7 +374,7 @@ def result_path(arch, shape, multi_pod, phase, variant=None, mesh_label=None,
     if reduced:
         name += "__reduced"
     if phase:
-        name += f"__{phase}"
+        name += f"__{phase.replace(':', '')}"  # 'stagger:2' -> 'stagger2'
     # Non-default variants get their own artifact: a --full-schedule barrier
     # A/B must neither be skipped as the existing pipelined record nor
     # clobber it.
@@ -442,11 +443,16 @@ def main():
                     help="lower the reduced (CPU-compilable) config variant")
     ap.add_argument("--no-calibrate", action="store_true",
                     help="skip the small-L unrolled calibration compiles")
-    ap.add_argument("--phase", default=None, choices=[None, "block", "full"])
+    ap.add_argument("--phase", default=None,
+                    help="lower one phase only: 'block', 'full', or "
+                         "'stagger:<r>' (the latter with --full-schedule "
+                         "staggered); default: every phase of the schedule")
     ap.add_argument("--full-schedule", default=None,
-                    choices=["pipelined", "barrier"],
+                    choices=["pipelined", "barrier", "staggered"],
                     help="engine full-step schedule (default pipelined; "
-                         "'barrier' lowers the gather-all/NS-all/slice-all A/B)")
+                         "'barrier' lowers the gather-all/NS-all/slice-all "
+                         "A/B; 'staggered' lowers one mixed-phase program "
+                         "per step-residue)")
     ap.add_argument("--zero1", action="store_true",
                     help="ZeRO-1 momentum sharding over the mesh's data axes")
     ap.add_argument("--zero1-flatten", action="store_true",
@@ -458,6 +464,12 @@ def main():
                     help="append lower/compile spans and per-combo "
                          "dryrun_combo events as JSONL (repro.obs schema)")
     args = ap.parse_args()
+    from repro.core.program import parse_stagger_phase
+
+    if args.phase is not None and args.phase not in ("block", "full") \
+            and parse_stagger_phase(args.phase) is None:
+        ap.error(f"--phase must be 'block', 'full' or 'stagger:<r>', "
+                 f"got {args.phase!r}")
     if args.log_file:
         from repro.obs import Bus, JsonlSink, set_bus
 
@@ -471,17 +483,25 @@ def main():
         variant["zero1_flatten"] = True
     variant = variant or None
 
+    # Default train-shape phases of the selected schedule: the synchronous
+    # block/full pair, or one mixed-phase program per step-residue under
+    # --full-schedule staggered (lower_combo's period default).
+    if args.full_schedule == "staggered":
+        train_phases = [f"stagger:{r}" for r in range(5)]
+    else:
+        train_phases = ["block", "full"]
+
     combos = []
     if args.all:
         for arch in ARCHS:
             for shape in SHAPES:
                 kind = SHAPES[shape].kind
-                phases = ["block", "full"] if kind == "train" else [None]
+                phases = list(train_phases) if kind == "train" else [None]
                 for phase in phases:
                     combos.append((arch, shape, args.multi_pod, phase))
     else:
         kind = SHAPES[args.shape].kind
-        phases = [args.phase] if (args.phase or kind != "train") else ["block", "full"]
+        phases = [args.phase] if (args.phase or kind != "train") else train_phases
         combos = [(args.arch, args.shape, args.multi_pod, p) for p in phases]
 
     for arch, shape, mp, phase in combos:

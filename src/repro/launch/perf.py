@@ -52,9 +52,11 @@ def main():
                          "shard_map engine, distributed.engine; 'gspmd' keeps "
                          "the implicit partitioner path for A/Bs)")
     ap.add_argument("--full-schedule", default=None,
-                    choices=["pipelined", "barrier"],
+                    choices=["pipelined", "barrier", "staggered"],
                     help="engine full-step schedule (default pipelined; "
-                         "'barrier' is the gather-all/NS-all/slice-all A/B)")
+                         "'barrier' is the gather-all/NS-all/slice-all A/B; "
+                         "'staggered' measures the per-residue mixed phases "
+                         "— pass --phase stagger:<r>)")
     ap.add_argument("--bf16-grads", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--log-file", default=None,

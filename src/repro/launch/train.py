@@ -3,7 +3,11 @@
 Runs on whatever devices exist (CPU: 1-device mesh; TPU slice: pass
 ``--mesh pod=2,data=2,model=2``-style specs — or the legacy ``--mesh-model``
 — to match it). The MuonBP phase schedule is driven here: two compiled step
-functions, ``step % P == 0`` picks 'full'. The optimizer runs through the
+functions, ``step % P == 0`` picks 'full'; ``--full-schedule staggered``
+replaces the synchronous pair with one mixed-phase step per step-residue
+(bucket i goes full when ``step % P == offset_i``, offsets balanced over
+DCN bytes), flattening the p-step DCN burst into a per-step trickle with
+the two-stepsize rule applied per bucket. The optimizer runs through the
 explicit shard_map comm engine by default (its schedule is asserted against
 CommPlan; ``--comm-engine gspmd`` keeps the implicit partitioner path for
 A/Bs). ``--zero1`` shards optimizer state over the mesh's data axes
@@ -54,13 +58,22 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import NSEngineConfig
 from repro.core import adamw, block_muon, combine, dion, label_tree, muon, muon_full
-from repro.core.muon import phase_for_step
+from repro.core.muon import StaggerSchedule
 from repro.core.schedule import cosine, wsd
 from repro.data.pipeline import SyntheticLM
 from repro.kernels import dispatch
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import init_params
-from repro.obs import Bus, DriftConfig, DriftMonitor, JsonlSink, StdoutSink, set_bus, span
+from repro.obs import (
+    Bus,
+    DriftConfig,
+    DriftMonitor,
+    JsonlSink,
+    ResidueDriftMonitor,
+    StdoutSink,
+    set_bus,
+    span,
+)
 from repro.obs.spans import parse_profile_window
 from repro.sharding import specs as sh
 from repro.training import checkpoint, resilience
@@ -126,12 +139,15 @@ def main():
                          "shard_map engine, repro.distributed; 'gspmd' keeps "
                          "the implicit partitioner path for A/Bs)")
     ap.add_argument("--full-schedule", default=None,
-                    choices=["pipelined", "barrier"],
+                    choices=["pipelined", "barrier", "staggered"],
                     help="engine-mode full-step schedule (default: pipelined "
                          "— per-bucket gathers overlapped with NS of "
                          "already-resident buckets; 'barrier' keeps the "
-                         "gather-all/NS-all/slice-all A/B; GSPMD always "
-                         "runs barrier-style)")
+                         "gather-all/NS-all/slice-all A/B; 'staggered' "
+                         "spreads each bucket's full step across the period "
+                         "— bucket i goes full on steps where step %% P == "
+                         "offset_i, flattening the p-step DCN burst into a "
+                         "per-step trickle; GSPMD always runs barrier-style)")
     ap.add_argument("--zero1", action="store_true",
                     help="shard optimizer state over the mesh's data axes "
                          "(ZeRO-1; ('pod','data') on a multi-pod mesh)")
@@ -207,6 +223,19 @@ def main():
                     help="output dir for the --profile-steps trace")
     args = ap.parse_args()
 
+    if args.full_schedule == "staggered":
+        # Staggering is an engine-mode schedule over the per-leaf gathers of
+        # a periodic optimizer: GSPMD has no explicit gathers to stagger and
+        # the non-periodic optimizers have no full step to spread.
+        if args.comm_engine != "shard_map":
+            ap.error("--full-schedule staggered requires --comm-engine shard_map")
+        if args.optimizer != "muonbp":
+            ap.error("--full-schedule staggered requires --optimizer muonbp "
+                     f"(got {args.optimizer!r})")
+        if args.period < 2:
+            ap.error("--full-schedule staggered requires --period >= 2 "
+                     f"(got {args.period})")
+
     # Telemetry bus. Sink order matters: the durable JSONL sink comes
     # FIRST, so every record a stdout parser (chaos_run) observes is
     # already fsync'd on disk — the containment invariant the chaos drill
@@ -271,28 +300,81 @@ def main():
         engine=engine, comm=comm,
     )
 
-    # Plan-vs-runtime drift monitor: block steps are the compute baseline,
-    # so the full-minus-block wall-time delta prices exactly the extra
-    # full-step collectives — the per-link byte delta from the same
-    # CommPlan the HLO audit checks (apply-phase bytes cancel in the
-    # difference). On a 1-device mesh the delta is zero bytes and the
-    # monitor is silent by construction.
-    drift_mon = None
-    if args.drift_threshold > 0 and period is not None and args.optimizer != "adamw":
+    # Step-phase schedule. Synchronous: every muon bucket goes full on the
+    # same step (step % P == 0). Staggered: bucket i goes full on steps
+    # where step % P == offset_i, with offsets assigned (by the program
+    # compiler AND the comm plan, identically) to balance per-step DCN
+    # bytes — the p-step burst becomes a per-step trickle.
+    staggered = args.full_schedule == "staggered"
+    schedule = StaggerSchedule(period, "staggered" if staggered else "synchronous")
+
+    # One comm plan serves both the stagger bookkeeping (offsets into
+    # run_meta, per-residue due counts) and the drift monitor.
+    comm_plan = None
+    if period is not None and args.optimizer != "adamw" and (
+            staggered or args.drift_threshold > 0):
         from repro.distributed.plan import plan_comm
 
         comm_plan = plan_comm(
             params, pspecs, mesh, labels=labels, block_specs=bspecs,
             zero1=args.zero1, zero1_flatten=args.zero1_flatten)
-        full_b = comm_plan.predicted_by_link("full")
-        block_b = comm_plan.predicted_by_link("block")
-        drift_mon = DriftMonitor(
-            comm_bytes_by_link={
-                k: max(full_b.get(k, 0) - block_b.get(k, 0), 0) for k in full_b
-            },
-            cfg=DriftConfig(threshold=args.drift_threshold),
-            bus=bus,
-        )
+
+    # Stagger bookkeeping: the offset map (leaf path -> due residue) and
+    # per-residue due counts, persisted in run metadata so a resume under a
+    # different schedule fails the named-field check instead of silently
+    # re-phasing the buckets.
+    stagger_offsets = None
+    due_by_residue = None
+    n_muon_matrices = sum(
+        1 for lab, p in zip(jax.tree.leaves(labels), jax.tree.leaves(params))
+        if lab == "muon" and p.ndim >= 2
+    )
+    if staggered:
+        stagger_offsets = comm_plan.stagger_offsets(period)
+        due_by_residue = [0] * period
+        for r in stagger_offsets.values():
+            due_by_residue[r] += 1
+    bus.event("schedule",
+              mode=schedule.mode, period=period,
+              offsets=stagger_offsets,
+              max_staggered_dcn_bytes=(
+                  comm_plan.max_staggered_dcn_bytes(period) if staggered else None),
+              full_dcn_bytes=(
+                  comm_plan.predicted_bytes("full", "dcn") if comm_plan else None))
+
+    # Plan-vs-runtime drift monitor. Synchronous: block steps are the
+    # compute baseline, so the full-minus-block wall-time delta prices
+    # exactly the extra full-step collectives — the per-link byte delta
+    # from the same CommPlan the HLO audit checks (apply-phase bytes cancel
+    # in the difference). Staggered: that delta is erased by design, so the
+    # monitor compares per-residue wall EMAs against the plan's per-residue
+    # bills instead. On a 1-device mesh the deltas are zero bytes and both
+    # monitors are silent by construction.
+    drift_mon = None
+    if args.drift_threshold > 0 and comm_plan is not None:
+        from repro.distributed.plan import LINKS
+
+        if staggered:
+            drift_mon = ResidueDriftMonitor(
+                comm_bytes_by_residue=tuple(
+                    {ln: comm_plan.predicted_bytes(
+                        "staggered", ln, period=period, residue=r)
+                     for ln in LINKS}
+                    for r in range(period)
+                ),
+                cfg=DriftConfig(threshold=args.drift_threshold),
+                bus=bus,
+            )
+        else:
+            full_b = comm_plan.predicted_by_link("full")
+            block_b = comm_plan.predicted_by_link("block")
+            drift_mon = DriftMonitor(
+                comm_bytes_by_link={
+                    k: max(full_b.get(k, 0) - block_b.get(k, 0), 0) for k in full_b
+                },
+                cfg=DriftConfig(threshold=args.drift_threshold),
+                bus=bus,
+            )
 
     guard_cfg = (
         resilience.GuardConfig(
@@ -309,8 +391,13 @@ def main():
             state.opt_state, params, mesh, pspecs=pspecs))
         opt_shardings = zero1_lib.opt_shardings(
             state.opt_state, params, mesh, pspecs=pspecs, zero1=True)
+    # One jitted step per phase name. Under staggered that is one mixed
+    # phase per step-residue (stagger:0..P-1); 'block' and 'full' ride
+    # along (jit is lazy, unused variants never compile) so the guard's
+    # forced-full escalation keeps its synchronous 'full' variant.
+    phases = tuple(dict.fromkeys((*schedule.phases(), "block", "full")))
     fns = make_train_step_fns(cfg, optimizer, ctx, opt_shardings=opt_shardings,
-                              guard=guard_cfg)
+                              guard=guard_cfg, phases=phases)
     pipe_src = SyntheticLM(cfg, args.batch, args.seq, seed=args.seed)
     pipe = iter(pipe_src)
 
@@ -329,7 +416,7 @@ def main():
         if key not in fault_fns:
             fault_fns[key] = make_train_step_fns(
                 cfg, optimizer, ctx, opt_shardings=opt_shardings,
-                guard=guard_cfg, fault=fault)[phase]
+                guard=guard_cfg, fault=fault, phases=phases)[phase]
         return fault_fns[key]
 
     # Run metadata: verified on resume so a wrong-arch/optimizer/mesh resume
@@ -341,6 +428,16 @@ def main():
         "mesh": {k: int(v) for k, v in zip(mesh.axis_names, mesh.devices.shape)},
         "zero1": bool(args.zero1),
         "seed": args.seed,
+        # Schedule mode + per-bucket offsets: a resume that would re-phase
+        # the staggered buckets (different mode, period, or offset map)
+        # fails the named-field check. Step-residue alignment itself needs
+        # no extra state — TrainState.step is restored bit-exactly and the
+        # phase is a pure function of (step, schedule).
+        "schedule": {
+            "mode": schedule.mode,
+            "period": period,
+            "offsets": stagger_offsets,
+        },
     }
 
     def save_ckpt(step):
@@ -425,10 +522,19 @@ def main():
             jax.profiler.start_trace(args.profile_dir)
             profiling[0] = True
         batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
-        phase = phase_for_step(step, period) if args.optimizer != "adamw" else "block"
+        phase = schedule.phase_for(step) if args.optimizer != "adamw" else "block"
         if forced_full and args.optimizer != "adamw":
             phase = "full"
         forced_full = False
+        # Step-residue telemetry: residue is the step's position in the
+        # period; due counts the muon buckets running their full path this
+        # step (the residue's offset group under staggered, the whole set
+        # on a synchronous full step).
+        residue = step % period if period else 0
+        if due_by_residue is not None and phase.startswith("stagger:"):
+            due = due_by_residue[residue]
+        else:
+            due = n_muon_matrices if phase == "full" else 0
         fault = plan.grad_fault(step) if plan else None
         # The step span times dispatch only unless --obs-block pulls device
         # completion inside the clock; either way no extra device fetch
@@ -436,7 +542,7 @@ def main():
         with span(bus, "step",
                   sync=((lambda: jax.block_until_ready(state))
                         if args.obs_block else None),
-                  step=step, phase=phase) as sp:
+                  step=step, phase=phase, residue=residue, due=due) as sp:
             state, metrics = step_fn(phase, fault)(state, batch)
         if drift_mon is not None:
             drift_mon.observe(step, phase, sp.dur_s)
@@ -462,6 +568,7 @@ def main():
                 or (healthy is not None and not healthy)):
             loss = float(metrics["loss"])
             rec = {"step": step, "loss": round(loss, 4), "phase": phase,
+                   "residue": residue, "due": due,
                    "wall_s": round(time.time() - t0, 1)}
             if escalator is not None:
                 rec.update(healthy=healthy, skipped=skipped,

@@ -20,6 +20,10 @@ engine, and the benchmarks:
   derives achieved bytes/s per link class, and emits a ``drift`` event
   when the modeled rate constants (``plan.MODELED_LINK_BYTES_PER_S``)
   disagree with observation beyond a threshold.
+  :class:`~repro.obs.drift.ResidueDriftMonitor` is the staggered-schedule
+  variant: per-residue wall EMAs checked against the plan's per-residue
+  byte bills (the full-minus-block delta the synchronous monitor prices
+  does not exist under ``--full-schedule staggered``).
 
 ``scripts/obs_report.py`` aggregates a run's JSONL into percentiles,
 per-phase breakdowns, comm-rate summaries, and an incident timeline.
@@ -38,7 +42,12 @@ from repro.obs.bus import (  # noqa: F401
     set_bus,
     validate_record,
 )
-from repro.obs.drift import DriftConfig, DriftMonitor, exposed_by_link  # noqa: F401
+from repro.obs.drift import (  # noqa: F401
+    DriftConfig,
+    DriftMonitor,
+    ResidueDriftMonitor,
+    exposed_by_link,
+)
 from repro.obs.spans import (  # noqa: F401
     Span,
     percentiles,

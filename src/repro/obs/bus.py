@@ -52,6 +52,7 @@ QUIET_EVENTS = (
     "comm_rates",
     "dryrun_combo",
     "perf_record",
+    "schedule",
 )
 
 # Schema registry: required fields per event type. ``scripts/obs_report.py``
@@ -59,9 +60,16 @@ QUIET_EVENTS = (
 # requires every key to be documented in docs/observability.md. The legacy
 # per-step record (no "event" key) is registered as "step".
 EVENT_FIELDS: dict[str, tuple[str, ...]] = {
-    "step": ("step", "loss", "phase"),
+    # "residue" is the step's position in the MuonBP period (step % P; 0
+    # when no period applies) and "due" the number of muon leaves running
+    # their full-orthogonalization path this step — the whole set on a
+    # synchronous full step, the residue's offset group under
+    # --full-schedule staggered, 0 on pure block steps. The full
+    # offset->leaf mapping is emitted once per run in the "schedule" event.
+    "step": ("step", "loss", "phase", "residue", "due"),
     "span": ("name", "dur_s"),
     "run_start": ("argv",),
+    "schedule": ("mode", "period"),
     "run_end": ("steps", "wall_s", "status", "counters"),
     "checkpoint": ("step", "path"),
     "skip_snapshot": ("path", "why"),

@@ -189,3 +189,147 @@ class DriftMonitor:
         if target is not None:
             target.emit(rec)
         return rec
+
+
+@dataclass
+class ResidueDriftMonitor:
+    """Per-residue drift monitor for the staggered full-step schedule.
+
+    Staggering erases the full-minus-block wall delta :class:`DriftMonitor`
+    measures — every step runs the same mixed body shape, just a different
+    due set. What survives is the *per-residue* structure: residue r's
+    steps pay ``sum_link bytes[r][link] / rate[link]`` of modeled comm
+    time, and residues with small bills are the compute baseline. The
+    monitor keeps one wall-time EMA per residue, takes the residue with
+    the smallest modeled bill as baseline, and compares each other
+    residue's measured EMA delta against its modeled delta — the same
+    ratio-threshold/warmup/cooldown policy as the synchronous monitor.
+
+    ``comm_bytes_by_residue`` is one ``{link: bytes}`` mapping per residue
+    (``CommPlan.staggered_bytes_by_residue`` per link, or the per-residue
+    exposed bytes of the compiled schedules). With balanced offsets the
+    residue deltas are small by design, so on flat configs the
+    ``min_modeled_s`` floor keeps the monitor silent by construction —
+    exactly the desired behavior: a flat schedule has no burst to watch.
+    """
+
+    comm_bytes_by_residue: tuple
+    rates: Mapping[str, float] = field(default_factory=lambda: dict(MODELED_LINK_BYTES_PER_S))
+    cfg: DriftConfig = field(default_factory=DriftConfig)
+    bus: Optional[bus_lib.Bus] = None
+
+    emas: dict = field(default_factory=dict)      # residue -> wall EMA
+    counts: dict = field(default_factory=dict)    # residue -> observations
+    drift_events: int = 0
+    _since_drift: int = 0
+
+    def modeled_s(self, residue: int) -> float:
+        bytes_by_link = self.comm_bytes_by_residue[residue]
+        return sum(
+            int(b) / float(self.rates[link])
+            for link, b in bytes_by_link.items()
+            if int(b) > 0 and float(self.rates.get(link, 0.0)) > 0.0
+        )
+
+    @property
+    def period(self) -> int:
+        return len(self.comm_bytes_by_residue)
+
+    @property
+    def baseline_residue(self) -> int:
+        return min(range(self.period), key=lambda r: (self.modeled_s(r), r))
+
+    def observe(self, step: int, phase: str, wall_s: float) -> Optional[dict]:
+        """Record one staggered step's wall time; returns a drift rec if fired."""
+        from repro.core.program import parse_stagger_phase
+
+        residue = parse_stagger_phase(phase)
+        if residue is None or residue >= self.period:
+            return None
+        beta = self.cfg.ema_beta
+        prev = self.emas.get(residue)
+        self.emas[residue] = (
+            float(wall_s) if prev is None
+            else beta * prev + (1.0 - beta) * float(wall_s)
+        )
+        self.counts[residue] = self.counts.get(residue, 0) + 1
+
+        base = self.baseline_residue
+        if residue == base:
+            return None
+        self._since_drift += 1
+        modeled = self.modeled_s(residue) - self.modeled_s(base)
+        if modeled < self.cfg.min_modeled_s:
+            return None
+        if (self.counts.get(residue, 0) < self.cfg.warmup
+                or self.counts.get(base, 0) < self.cfg.warmup):
+            return None
+        measured = self.emas[residue] - self.emas[base]
+        ratio = max(measured, 1e-9) / modeled
+        t = self.cfg.threshold
+        if 1.0 / t <= ratio <= t:
+            return None
+        if self._since_drift <= self.cfg.cooldown and self.drift_events > 0:
+            return None
+        self.drift_events += 1
+        self._since_drift = 0
+        rec = {
+            "event": "drift",
+            "step": int(step),
+            "residue": int(residue),
+            "baseline_residue": int(base),
+            "ratio": round(ratio, 4),
+            "measured_extra_s": round(measured, 6),
+            "modeled_extra_s": round(modeled, 6),
+            "modeled_bytes_per_s": {k: float(v) for k, v in self.rates.items()},
+        }
+        if self.bus is not None:
+            self.bus.emit(rec)
+        return rec
+
+    def achieved_rates(self) -> dict[str, float]:
+        """Per-link achieved rates from the most comm-heavy residue's delta."""
+        base = self.baseline_residue
+        best, best_modeled = None, 0.0
+        for r in range(self.period):
+            if r == base or r not in self.emas or base not in self.emas:
+                continue
+            m = self.modeled_s(r) - self.modeled_s(base)
+            if m > best_modeled:
+                best, best_modeled = r, m
+        if best is None or best_modeled < self.cfg.min_modeled_s:
+            return {}
+        measured = self.emas[best] - self.emas[base]
+        scale = best_modeled / max(measured, 1e-9)
+        return {
+            link: round(float(self.rates[link]) * scale, 1)
+            for link, b in self.comm_bytes_by_residue[best].items()
+            if int(b) > 0
+        }
+
+    def report(self, bus: Optional[bus_lib.Bus] = None) -> dict:
+        """Emit and return the ``comm_rates`` summary, broken down by residue."""
+        rec = {
+            "event": "comm_rates",
+            "modeled_bytes_per_s": {k: float(v) for k, v in self.rates.items()},
+            "achieved_bytes_per_s": self.achieved_rates(),
+            "comm_bytes_by_residue": [
+                {k: int(v) for k, v in by_link.items()}
+                for by_link in self.comm_bytes_by_residue
+            ],
+            "baseline_residue": self.baseline_residue,
+            "modeled_s_by_residue": [
+                round(self.modeled_s(r), 6) for r in range(self.period)
+            ],
+            "ema_s_by_residue": {
+                str(r): round(e, 6) for r, e in sorted(self.emas.items())
+            },
+            "counts_by_residue": {
+                str(r): n for r, n in sorted(self.counts.items())
+            },
+            "drift_events": self.drift_events,
+        }
+        target = bus if bus is not None else self.bus
+        if target is not None:
+            target.emit(rec)
+        return rec

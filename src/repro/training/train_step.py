@@ -185,10 +185,16 @@ def train_step(
 
 def make_train_step_fns(cfg, optimizer, ctx, donate=True, compute_dtype=jnp.bfloat16,
                         accum_steps: int = 1, opt_shardings=None, guard=None,
-                        fault=None):
-    """Returns {'block': jitted fn, 'full': jitted fn} over (state, batch)."""
+                        fault=None, phases=("block", "full")):
+    """Returns {phase: jitted fn} over (state, batch), one per phase name.
+
+    ``phases`` defaults to the synchronous pair; a staggered launcher passes
+    ``StaggerSchedule.phases() + ('full',)`` so each step-residue gets its
+    own compiled mixed-phase step (and the forced-full escalation keeps a
+    'full' variant).
+    """
     fns = {}
-    for phase in ("block", "full"):
+    for phase in phases:
         step = functools.partial(
             train_step,
             cfg=cfg,

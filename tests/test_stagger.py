@@ -1,0 +1,463 @@
+"""Staggered full-step schedules (PR 8).
+
+Host-side sections (no forced devices): offset assignment (balanced,
+deterministic, DCN-first), StaggerSchedule phase arithmetic, per-residue
+plan pricing on a fake hierarchical mesh (the headline metric: per-step
+exposed DCN bytes under stagger ~ full/P, flat across residues), muon
+validation errors, and the no-retrace guarantee (one compile covers all P
+stagger phases across two full periods of updates).
+
+Device section (subprocess, 8 forced host devices on a (2,2,2)
+pod/data/model mesh, marked slow): staggered params == synchronous params
+after one full period, per-residue HLO collective bytes matching the plan
+exactly, and ZeRO-1 + flatten-fallback compatibility.
+
+Parity tolerance note: with constant grads, zero weight decay and constant
+stepsizes, momentum is a scalar multiple of the grad every step (m_t =
+sum_i mu^i * g), and Newton-Schulz is scale-invariant (fro-norm
+pre-normalization), so each leaf's per-step orthogonalized update is
+step-independent. Over one period a leaf accrues (P-1) block-LR block
+updates plus one full-LR full update under EITHER schedule, so the summed
+params agree up to fp32 summation order — 1e-5 on O(1)-scale updates, not
+bitwise.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+import numpy as np
+
+from repro.core import LeafSpec, compile_program, muon
+from repro.core import program as program_lib
+from repro.core.blocking import BlockSpec2D
+from repro.core.combine import apply_updates
+from repro.core.muon import StaggerSchedule, phase_for_step
+from repro.distributed import assign_stagger_offsets, make_engine, plan_comm
+
+
+def fake_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+# ------------------------------------------------------------ offsets
+
+def test_assign_stagger_offsets_balances_dcn():
+    items = [
+        ("a", 100, 200), ("b", 90, 100), ("c", 80, 90),
+        ("d", 60, 70), ("e", 50, 60), ("f", 40, 50),
+    ]
+    offsets = assign_stagger_offsets(items, 3)
+    assert set(offsets) == {k for k, *_ in items}
+    assert set(offsets.values()) == {0, 1, 2}
+    loads = [0, 0, 0]
+    for k, dcn, _ in items:
+        loads[offsets[k]] += dcn
+    # greedy LPT bound: max residue load <= average + largest item
+    total = sum(d for _, d, _ in items)
+    assert max(loads) <= total / 3 + max(d for _, d, _ in items)
+
+
+def test_assign_stagger_offsets_deterministic_and_order_free():
+    items = [("a", 10, 10), ("b", 10, 10), ("c", 5, 9), ("d", 0, 3)]
+    ref = assign_stagger_offsets(items, 2)
+    assert assign_stagger_offsets(list(reversed(items)), 2) == ref
+    # zero-byte leaves spread by count once byte loads tie
+    zeros = [(f"z{i}", 0, 0) for i in range(6)]
+    counts = [0, 0, 0]
+    for r in assign_stagger_offsets(zeros, 3).values():
+        counts[r] += 1
+    assert counts == [2, 2, 2]
+
+
+def test_assign_stagger_offsets_rejects_bad_period():
+    with pytest.raises(ValueError, match="period"):
+        assign_stagger_offsets([("a", 1, 1)], 1)
+
+
+# ------------------------------------------------------------ schedule
+
+def test_stagger_schedule_phase_cycle():
+    sched = StaggerSchedule(3, "staggered")
+    assert [sched.phase_for(s) for s in range(6)] == [
+        "stagger:0", "stagger:1", "stagger:2",
+        "stagger:0", "stagger:1", "stagger:2",
+    ]
+    assert sched.phases() == ("stagger:0", "stagger:1", "stagger:2")
+
+
+def test_stagger_schedule_synchronous_matches_phase_for_step():
+    for period in (None, 1, 3, 5):
+        sched = StaggerSchedule(period, "synchronous")
+        for s in range(12):
+            assert sched.phase_for(s) == phase_for_step(s, period)
+
+
+def test_stagger_schedule_validation():
+    with pytest.raises(ValueError):
+        StaggerSchedule(3, "sometimes")
+    with pytest.raises(ValueError):
+        StaggerSchedule(1, "staggered")
+    with pytest.raises(ValueError):
+        StaggerSchedule(None, "staggered")
+
+
+def test_stagger_phase_roundtrip():
+    assert program_lib.stagger_phase(4) == "stagger:4"
+    assert program_lib.parse_stagger_phase("stagger:4") == 4
+    assert program_lib.parse_stagger_phase("full") is None
+    assert program_lib.parse_stagger_phase("stagger:") is None
+    assert program_lib.parse_stagger_phase("stagger:x") is None
+
+
+# ------------------------------------------------------------ plan pricing
+
+def _hier_plan(period=3):
+    mesh = fake_mesh()
+    layout = {
+        "a": ((64, 128), P(None, ("pod", "model"))),   # dcn gather
+        "b": ((64, 64), P(None, "model")),             # ici only
+        "c": ((4, 32, 32), P(None, None, "model")),    # ici, stacked
+        "d": ((32, 96), P(None, ("pod", "model"))),    # dcn gather
+        "e": ((16, 16), P(None, None)),                # local, no comm
+    }
+    params = {k: jax.ShapeDtypeStruct(s, jnp.float32) for k, (s, _) in layout.items()}
+    pspecs = {k: sp for k, (_, sp) in layout.items()}
+    plan = plan_comm(params, pspecs, mesh, labels={k: "muon" for k in layout})
+    return plan, period
+
+
+def test_staggered_plan_flat_dcn_across_residues():
+    plan, p = _hier_plan()
+    full_dcn = plan.predicted_bytes("full", "dcn")
+    assert full_dcn > 0
+    by_res = plan.staggered_bytes_by_residue(p, "dcn")
+    assert len(by_res) == p
+    max_leaf_dcn = max(
+        leaf.predicted_bytes("full", "dcn") for leaf in plan.stagger_leaves()
+    )
+    # Acceptance: per-step exposed DCN <= (1/p) * synchronous full-step
+    # bytes, within one bucket of imbalance — and flat across residues.
+    for r_bytes in by_res:
+        assert r_bytes <= full_dcn / p + max_leaf_dcn
+    assert plan.max_staggered_dcn_bytes(p) == max(by_res)
+    assert plan.max_staggered_dcn_bytes(p) < full_dcn
+
+
+def test_staggered_plan_conserves_bytes_over_one_period():
+    plan, p = _hier_plan()
+    for link in (None, "ici", "dcn"):
+        full = plan.predicted_bytes("full", link)
+        block = plan.predicted_bytes("block", link)
+        by_res = plan.staggered_bytes_by_residue(p, link)
+        # each leaf is 'full' in exactly one residue and 'block' in the rest
+        assert sum(by_res) == full + (p - 1) * block
+
+
+def test_staggered_plan_by_axes_sums_to_bytes():
+    plan, p = _hier_plan()
+    for r in range(p):
+        by_axes = plan.predicted_by_axes("staggered", period=p, residue=r)
+        assert sum(by_axes.values()) == plan.predicted_bytes(
+            "staggered", period=p, residue=r)
+
+
+def test_plan_offsets_match_program_offsets():
+    plan, p = _hier_plan()
+    mesh = fake_mesh()
+    layout = {
+        "a": (64, 128), "b": (64, 64), "c": (4, 32, 32),
+        "d": (32, 96), "e": (16, 16),
+    }
+    pspecs = {
+        "a": P(None, ("pod", "model")), "b": P(None, "model"),
+        "c": P(None, None, "model"), "d": P(None, ("pod", "model")),
+        "e": P(None, None),
+    }
+    params = {k: jax.ShapeDtypeStruct(s, jnp.float32) for k, s in layout.items()}
+    eng = make_engine(params, pspecs, mesh)
+    leaf_specs = tuple(
+        LeafSpec(key=(k,), shape=s, dtype="float32") for k, s in layout.items()
+    )
+    prog = compile_program(leaf_specs, backend="jnp", engine=eng,
+                           full_schedule="staggered", stagger_period=p)
+    assert prog.stagger_period == p
+    assert prog.stagger_offsets == plan.stagger_offsets(p)
+    # due sets partition the leaf indices by the offset map
+    for r in range(p):
+        due = set(prog.phase(f"stagger:{r}").due)
+        expect = {i for i, ls in enumerate(leaf_specs)
+                  if prog.stagger_offsets["/".join(ls.key)] == r}
+        assert due == expect
+
+
+# ------------------------------------------------------------ muon glue
+
+def _one_dev_setup():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = {
+        "wa": jax.random.normal(jax.random.PRNGKey(0), (32, 64)),
+        "wb": jax.random.normal(jax.random.PRNGKey(1), (32, 32)),
+        "wc": jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16)),
+    }
+    pspecs = {"wa": P(None, "model"), "wb": P(None, "model"),
+              "wc": P(None, None, "model")}
+    eng = make_engine(params, pspecs, mesh)
+    return params, eng
+
+
+def test_muon_staggered_requires_engine_and_period():
+    params, eng = _one_dev_setup()
+    with pytest.raises(ValueError, match="staggered"):
+        muon(1e-2, period=3, full_schedule="staggered")  # no comm engine
+    with pytest.raises(ValueError, match="period"):
+        muon(1e-2, period=None, comm=eng, full_schedule="staggered")
+    with pytest.raises(ValueError, match="period"):
+        muon(1e-2, period=1, comm=eng, full_schedule="staggered")
+
+
+def test_muon_update_validates_stagger_phases():
+    params, eng = _one_dev_setup()
+    grads = jax.tree.map(jnp.ones_like, params)
+    opt = muon(1e-2, period=3, comm=eng, full_schedule="staggered")
+    state = opt.init(params)
+    with pytest.raises(ValueError, match="out of range"):
+        opt.update(grads, state, params, "stagger:3")
+    opt_sync = muon(1e-2, period=3, comm=eng)
+    with pytest.raises(ValueError, match="stagger"):
+        opt_sync.update(grads, opt_sync.init(params), params, "stagger:0")
+
+
+def test_staggered_updates_compile_once_across_two_periods():
+    """No retrace: all P stagger phases live in ONE compiled UpdateProgram,
+    and cycling updates over two full periods hits the cache after the
+    first call."""
+    params, eng = _one_dev_setup()
+    grads = jax.tree.map(jnp.ones_like, params)
+    period = 3
+    opt = muon(1e-2, 5e-3, period=period, comm=eng, full_schedule="staggered")
+    state = opt.init(params)
+    compiled = []
+    real = program_lib.compile_program
+
+    def counting(*a, **kw):
+        prog = real(*a, **kw)
+        compiled.append(prog)
+        return prog
+
+    # muon.py calls program_lib.compile_program through the module object,
+    # so patching the single shared module attribute is sufficient.
+    program_lib.compile_program = counting
+    try:
+        sched = StaggerSchedule(period, "staggered")
+        for step in range(2 * period):
+            _, state = opt.update(grads, state, params, sched.phase_for(step))
+    finally:
+        program_lib.compile_program = real
+    assert len(compiled) == 1, "stagger phases must not retrace per residue"
+    (prog,) = compiled
+    assert set(prog.phases) == (
+        {"block", "full"} | {f"stagger:{r}" for r in range(period)}
+    )
+
+
+def test_run_meta_schedule_mismatch_rejected():
+    """Resume gate: the nested run_meta['schedule'] dict (mode, period,
+    per-leaf offsets) participates in the named-field check — a staggered
+    snapshot refuses a synchronous resume and vice versa; matching
+    schedules (JSON-roundtripped, as load_meta would yield) pass."""
+    from repro.training.checkpoint import CheckpointError, check_run_meta
+
+    stag = {"mode": "staggered", "period": 3,
+            "offsets": {"layers/attn/wq": 0, "layers/mlp/wi": 1}}
+    sync = {"mode": "synchronous", "period": 3, "offsets": None}
+    meta = {"run": {"arch": "granite-8b", "schedule": stag}}
+
+    with pytest.raises(CheckpointError, match="schedule"):
+        check_run_meta(meta, {"schedule": sync})
+    # same schedule after a JSON round-trip must compare equal
+    roundtrip = json.loads(json.dumps(stag))
+    check_run_meta(meta, {"schedule": roundtrip, "arch": "granite-8b"})
+    # a different offset assignment is a different run
+    other = dict(stag, offsets={"layers/attn/wq": 1, "layers/mlp/wi": 0})
+    with pytest.raises(CheckpointError, match="schedule"):
+        check_run_meta(meta, {"schedule": other})
+
+
+# ------------------------------------------------------------ 8-device
+
+pytestmark_device = pytest.mark.slow
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import muon
+from repro.core.blocking import BlockSpec2D
+from repro.core.combine import apply_updates
+from repro.core.muon import StaggerSchedule, phase_for_step
+from repro.distributed import (
+    assert_staggered_matches_plan, audit_optimizer, bytes_by_link,
+    make_engine, plan_comm,
+)
+from repro.distributed import zero1 as z1
+
+PERIOD = 3
+out = {}
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+layout = {
+    "stack": ((3, 16, 32), P(None, None, "model"),     BlockSpec2D(1, 2)),
+    "wq":    ((16, 32),    P(None, "model"),           BlockSpec2D(1, 2)),
+    # three pod-sharded leaves so the per-period DCN burst can actually
+    # spread over the residues (one per residue at period 3)
+    "podw":  ((16, 64),    P(None, ("pod", "model")),  BlockSpec2D(1, 4)),
+    "podw2": ((16, 32),    P(None, ("pod", "model")),  BlockSpec2D(1, 4)),
+    "podw3": ((8, 64),     P(None, ("pod", "model")),  BlockSpec2D(1, 4)),
+    "local": ((12, 12),    P(None, None),              None),
+    # sharded but unblocked: gathers every phase, 'due' only at its residue
+    "ub":    ((16, 48),    P(None, "model"),           None),
+}
+pspecs = {k: sp for k, (s, sp, b) in layout.items()}
+blocks = {k: b for k, (s, sp, b) in layout.items()}
+params = {
+    k: jax.device_put(jax.random.normal(jax.random.PRNGKey(i), s),
+                      NamedSharding(mesh, sp))
+    for i, (k, (s, sp, b)) in enumerate(layout.items())
+}
+grads = jax.tree.map(lambda p: 0.1 * p, params)  # constant across steps
+labels = {k: "muon" for k in layout}
+a_params = jax.tree.map(
+    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=x.sharding), params)
+
+plan = plan_comm(a_params, pspecs, mesh, labels=labels, block_specs=blocks)
+eng = make_engine(params, pspecs, mesh)
+opt_sync = muon(0.02, 0.005, period=PERIOD, block_specs=blocks, comm=eng)
+opt_st = muon(0.02, 0.005, period=PERIOD, block_specs=blocks, comm=eng,
+              full_schedule="staggered")
+
+# --- parity: staggered == synchronous params after one full period ------
+sched = StaggerSchedule(PERIOD, "staggered")
+p_sync, s_sync = params, opt_sync.init(params)
+p_st, s_st = params, opt_st.init(params)
+for step in range(PERIOD):
+    u, s_sync = opt_sync.update(grads, s_sync, p_sync, phase_for_step(step, PERIOD))
+    p_sync = apply_updates(p_sync, u)
+    u, s_st = opt_st.update(grads, s_st, p_st, sched.phase_for(step))
+    p_st = apply_updates(p_st, u)
+out["parity_err"] = max(
+    float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+    for a, b in zip(jax.tree.leaves(p_sync), jax.tree.leaves(p_st))
+)
+out["momentum_err"] = max(
+    float(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(jax.tree.leaves(s_sync.momentum),
+                    jax.tree.leaves(s_st.momentum))
+)
+
+# --- per-residue HLO audit: collective bytes match the plan EXACTLY -----
+a_opt = jax.eval_shape(opt_st.init, a_params)
+a_opt = z1.attach(a_opt, a_params, mesh)
+out["residues"] = {}
+for r in range(PERIOD):
+    res = audit_optimizer(opt_st, a_params, a_opt, phase=f"stagger:{r}")
+    assert_staggered_matches_plan(res, plan, mesh, period=PERIOD, residue=r)
+    out["residues"][str(r)] = {
+        "by_link": bytes_by_link(res, mesh),
+        "plan_dcn": plan.predicted_bytes("staggered", "dcn",
+                                         period=PERIOD, residue=r),
+        "plan_total": plan.predicted_bytes("staggered",
+                                           period=PERIOD, residue=r),
+    }
+out["full_dcn"] = plan.predicted_bytes("full", "dcn")
+out["max_leaf_dcn"] = max(
+    leaf.predicted_bytes("full", "dcn") for leaf in plan.stagger_leaves())
+out["max_staggered_dcn"] = plan.max_staggered_dcn_bytes(PERIOD)
+
+# --- ZeRO-1 + flatten fallback compatibility ----------------------------
+plan_f = plan_comm(a_params, pspecs, mesh, labels=labels, block_specs=blocks,
+                   zero1=True, zero1_flatten=True)
+eng_f = make_engine(params, pspecs, mesh, zero1=True, zero1_flatten=True)
+opt_f = muon(0.02, 0.005, period=PERIOD, block_specs=blocks, comm=eng_f,
+             full_schedule="staggered")
+s_f = z1.shard_state(opt_f.init(params), params, mesh, pspecs=pspecs)
+# Offsets may legitimately differ between the plain and ZeRO-1 engines
+# (ZeRO-1 scales each leaf's gather bytes), so compare per leaf along each
+# program's OWN offset map: a leaf's full-path update at its due residue
+# and block-path update at any off residue must agree across engines.
+off0 = plan.stagger_offsets(PERIOD)
+off_f = plan_f.stagger_offsets(PERIOD)
+assert set(off0) == set(off_f)
+s_plain = opt_st.init(params)
+u_st = {r: opt_st.update(grads, s_plain, params, "stagger:%d" % r)[0]
+        for r in range(PERIOD)}
+u_fl = {r: opt_f.update(grads, s_f, params, "stagger:%d" % r)[0]
+        for r in range(PERIOD)}
+zero1_err = 0.0
+for k in layout:
+    r0, rf = off0[k], off_f[k]
+    b0 = next(r for r in range(PERIOD) if r != r0)
+    bf = next(r for r in range(PERIOD) if r != rf)
+    for a, b in ((u_st[r0][k], u_fl[rf][k]), (u_st[b0][k], u_fl[bf][k])):
+        zero1_err = max(zero1_err, float(jnp.max(jnp.abs(a - b))))
+out["zero1_err"] = zero1_err
+a_opt_f = jax.eval_shape(opt_f.init, a_params)
+a_opt_f = z1.attach(a_opt_f, a_params, mesh, zero1=True)
+for r in range(PERIOD):
+    res = audit_optimizer(opt_f, a_params, a_opt_f, phase=f"stagger:{r}")
+    assert_staggered_matches_plan(res, plan_f, mesh, period=PERIOD, residue=r,
+                                  include_apply=True)
+out["zero1_audit"] = "ok"
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def result():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        env=env, timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.slow
+def test_staggered_matches_synchronous_after_one_period(result):
+    """Constant grads + wd=0 + const LRs: summed updates over one period
+    are schedule-independent (see module docstring) — fp32 tolerance."""
+    assert result["parity_err"] < 1e-5, result["parity_err"]
+    assert result["momentum_err"] < 1e-6, result["momentum_err"]
+
+
+@pytest.mark.slow
+def test_per_residue_hlo_bytes_match_plan(result):
+    """assert_staggered_matches_plan passed for every residue in-subprocess
+    (exact per-axes gather-class bytes); here: the DCN bill is flat across
+    residues and the worst residue undercuts the synchronous burst."""
+    full_dcn = result["full_dcn"]
+    assert full_dcn > 0
+    for r, rec in result["residues"].items():
+        assert rec["plan_dcn"] <= full_dcn / 3 + result["max_leaf_dcn"], (r, rec)
+    assert result["max_staggered_dcn"] < full_dcn
+
+
+@pytest.mark.slow
+def test_staggered_zero1_flatten_compat(result):
+    """Per-leaf full/block-path updates agree across the plain and the
+    ZeRO-1 flatten-fallback engines (fp32 tolerance; bucket packing differs
+    between the two programs' due sets)."""
+    assert result["zero1_err"] < 1e-5, result["zero1_err"]
+    assert result["zero1_audit"] == "ok"
