@@ -38,7 +38,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.obs.bus import read_jsonl  # noqa: E402
-from repro.training.faults import FaultPlan  # noqa: E402
+from repro.training.faults import GRAD_KINDS, FaultPlan  # noqa: E402
 
 
 def telemetry_failures(log_file: str, stdout_recs: list[dict],
@@ -185,8 +185,10 @@ def main() -> int:
                             f"gap after {prev_last}")
         prev_last = launch_steps[-1]
     if plan and guarded:
-        grad_faults = [f for f in plan.faults if f.kind != "kill_in_save"
-                       and f.kind != "kill_mid_save"]
+        # Count only in-graph faults: kill/serving kinds never reach the
+        # guard, so excluding kinds by name here would silently miscount
+        # as the fault grammar grows.
+        grad_faults = [f for f in plan.faults if f.kind in GRAD_KINDS]
         want = len(grad_faults)
         got = max((r.get("skipped", 0) for recs in launches for r in recs
                    if "loss" in r), default=0)

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs coverage gate: flags and telemetry schema must be documented.
 
-Three checks, all source-level regex (importing the launchers would touch
+Checks, all source-level regex (importing the launchers would touch
 XLA_FLAGS/device state):
 
 * every ``add_argument`` long flag in launch/train.py, launch/perf.py,
@@ -9,7 +9,12 @@ XLA_FLAGS/device state):
 * every observability flag (``--log-file``, ``--obs-*``, ``--drift-*``,
   ``--profile-*``) also appears in ``docs/observability.md``;
 * every event type registered in ``repro.obs.bus.EVENT_FIELDS`` appears in
-  ``docs/observability.md`` — add an event, document it, or CI fails.
+  ``docs/observability.md`` — add an event, document it, or CI fails;
+* every ``add_argument`` long flag in scripts/serve_sim.py appears in
+  ``docs/serving.md``;
+* every event type the serving engine emits (``SERVE_EVENTS`` in
+  ``repro/serving/engine.py``) appears in ``docs/serving.md`` AND is
+  registered in ``EVENT_FIELDS`` — the two registries cannot drift apart.
 
 Run by scripts/ci.sh.
 """
@@ -28,7 +33,10 @@ LAUNCHERS = [
 ]
 GUIDE = REPO / "docs" / "operators-guide.md"
 OBS_GUIDE = REPO / "docs" / "observability.md"
+SERVE_GUIDE = REPO / "docs" / "serving.md"
 BUS_SRC = REPO / "src" / "repro" / "obs" / "bus.py"
+SERVE_SIM = REPO / "scripts" / "serve_sim.py"
+ENGINE_SRC = REPO / "src" / "repro" / "serving" / "engine.py"
 
 # every long option mentioned in an add_argument call (aliases included)
 _FLAG_RE = re.compile(r"add_argument\(\s*((?:\"--[\w-]+\",?\s*)+)")
@@ -54,14 +62,24 @@ def bus_event_types() -> list[str]:
     return re.findall(r"^\s*\"([\w-]+)\":", m.group(1), re.M)
 
 
+def serve_event_types() -> list[str]:
+    """Event names from the SERVE_EVENTS tuple in serving/engine.py."""
+    src = ENGINE_SRC.read_text()
+    m = re.search(r"SERVE_EVENTS\s*=\s*\((.*?)\)", src, re.S)
+    if not m:
+        raise SystemExit(f"could not locate SERVE_EVENTS in {ENGINE_SRC}")
+    return re.findall(r"\"([\w-]+)\"", m.group(1))
+
+
 def main() -> int:
     failures: list[str] = []
-    for doc in (GUIDE, OBS_GUIDE):
+    for doc in (GUIDE, OBS_GUIDE, SERVE_GUIDE):
         if not doc.exists():
             print(f"missing {doc}", file=sys.stderr)
             return 1
     guide = GUIDE.read_text()
     obs_guide = OBS_GUIDE.read_text()
+    serve_guide = SERVE_GUIDE.read_text()
 
     total = 0
     obs_total = 0
@@ -88,13 +106,31 @@ def main() -> int:
                 f"obs/bus.py: event type {ev!r} not documented in "
                 f"docs/observability.md")
 
+    serve_flags = launcher_flags(SERVE_SIM)
+    for flag in serve_flags:
+        if flag not in serve_guide:
+            failures.append(
+                f"serve_sim.py: {flag} not documented in docs/serving.md")
+    serve_events = serve_event_types()
+    for ev in serve_events:
+        if f'"{ev}"' not in serve_guide and f"`{ev}`" not in serve_guide:
+            failures.append(
+                f"serving/engine.py: event type {ev!r} not documented in "
+                f"docs/serving.md")
+        if ev not in events:
+            failures.append(
+                f"serving/engine.py: event type {ev!r} emitted but not "
+                f"registered in obs/bus.py EVENT_FIELDS")
+
     if failures:
         for f in failures:
             print(f, file=sys.stderr)
         return 1
     print(f"docs check: {total} launcher flags documented in "
           f"docs/operators-guide.md; {obs_total} obs flags and "
-          f"{len(events)} event types documented in docs/observability.md")
+          f"{len(events)} event types documented in docs/observability.md; "
+          f"{len(serve_flags)} serve_sim flags and {len(serve_events)} "
+          f"serving event types documented in docs/serving.md")
     return 0
 
 

@@ -122,6 +122,22 @@ python scripts/obs_report.py /tmp/repro_stagger/run.jsonl \
 echo "== staggered parity + per-residue HLO audit (8 host devices, slow) =="
 python -m pytest -q tests/test_stagger.py -m slow
 
+echo "== serving smoke (overload burst + fault -> obs_report) =="
+# Seeded open-loop drive of the continuous-batching engine: a 6x burst
+# into a 2-slot engine with a slow_step fault injected mid-burst. The
+# engine must degrade and shed (not wedge or leak — serve_sim exits 1 on
+# a block/slot leak), and the fsync'd trail must replay through the
+# report with zero schema violations and >=1 shed event actually present.
+rm -rf /tmp/repro_serve
+python scripts/serve_sim.py \
+    --arch granite-8b --steps 30 --rate 0.5 --burst 8:16x6 --ttl 2.0 \
+    --slots 2 --queue 6 --block-size 4 --num-blocks 32 \
+    --max-model-len 48 --max-prompt-len 24 --max-new-tokens 8 \
+    --prompt-lens 6,10 --new-tokens 4,8 --seed 0 \
+    --fault-plan slow_step@5x0.01 --log-file /tmp/repro_serve/run.jsonl
+python scripts/obs_report.py /tmp/repro_serve/run.jsonl \
+    --strict --require-event shed --require-event admit --require-event complete
+
 echo "== docs flag coverage =="
 # Every train.py/perf.py/dryrun.py CLI flag must appear in the operator guide.
 python scripts/check_docs.py

@@ -15,6 +15,11 @@ Sections:
   checkpoint.save / resume.
 * **comm drift** — the last ``comm_rates`` summary (modeled vs achieved
   bytes/s per link class) and every ``drift`` event.
+* **serving** — present only when the trail carries serving traffic
+  (``scripts/serve_sim.py`` / ``repro.serving.engine``): outcome counts by
+  type and reason, virtual-clock TTFT / per-token percentiles from
+  ``complete`` events, wall-clock decode-dispatch percentiles from
+  ``serve_decode`` spans, and the final goodput-vs-offered summary.
 * **counters** — merged from ``run_end`` records (guard skips,
   escalations, checkpoint saves/fallbacks, NS launch counts).
 * **incident timeline** — chronological run_start / unhealthy steps /
@@ -22,9 +27,10 @@ Sections:
   no preceding run_end) / resumes / aborts.
 
 Exit status: 0 clean; 1 when --strict finds schema violations, when
---require-phase-spans finds a phase with no spans, or when
---require-zero-drift finds drift events. Used by scripts/ci.sh as the obs
-smoke gate.
+--require-phase-spans finds a phase with no spans, when
+--require-zero-drift finds drift events, or when --require-event TYPE
+finds no event of TYPE. Used by scripts/ci.sh as the obs smoke gate (the
+serving smoke asserts ``--require-event shed`` on an overload run).
 """
 
 from __future__ import annotations
@@ -132,6 +138,57 @@ def drift_section(records: list[dict]) -> tuple[list[str], int]:
     return lines, len(drifts)
 
 
+def serving_section(records: list[dict]) -> list[str]:
+    """Serving-engine rollup from admit/reject/shed/cancel/complete events.
+
+    Only rendered when the trail contains serving traffic (a training-only
+    trail keeps its old report byte-for-byte)."""
+    kinds = ("admit", "reject", "shed", "cancel", "complete", "serve_report")
+    if not any(event_type(r) in kinds for r in records):
+        return []
+    lines = ["== serving =="]
+    by_outcome: dict[str, int] = {}
+    for r in records:
+        ev = event_type(r)
+        if ev in ("reject", "shed", "cancel"):
+            key = f"{ev}:{r.get('reason')}"
+        elif ev in ("admit", "complete"):
+            key = ev
+        else:
+            continue
+        by_outcome[key] = by_outcome.get(key, 0) + 1
+    for k in sorted(by_outcome):
+        lines.append(f"{k}: {by_outcome[k]}")
+    completes = [r for r in records if event_type(r) == "complete"]
+    ttft = percentiles([r["ttft_s"] for r in completes if "ttft_s" in r])
+    tpot = percentiles([r["tpot_s"] for r in completes
+                        if r.get("tpot_s") is not None and r["tpot_s"] > 0])
+    if ttft:
+        lines.append(f"ttft: p50={ttft['p50'] * 1e3:.1f}ms "
+                     f"p95={ttft['p95'] * 1e3:.1f}ms "
+                     f"p99={ttft['p99'] * 1e3:.1f}ms (virtual)")
+    if tpot:
+        lines.append(f"per-token: p50={tpot['p50'] * 1e3:.1f}ms "
+                     f"p95={tpot['p95'] * 1e3:.1f}ms "
+                     f"p99={tpot['p99'] * 1e3:.1f}ms (virtual)")
+    decode = percentiles([r["dur_s"] for r in records
+                          if event_type(r) == "span"
+                          and r.get("name") == "serve_decode"])
+    if decode:
+        lines.append(f"decode dispatch (wall): p50={decode['p50'] * 1e3:.1f}ms "
+                     f"p95={decode['p95'] * 1e3:.1f}ms")
+    for r in records:
+        if event_type(r) == "serve_report":
+            lines.append(
+                f"offered {r.get('offered')} req / "
+                f"{r.get('offered_tokens')} tok; completed "
+                f"{r.get('completed')} req / {r.get('completed_tokens')} tok; "
+                f"goodput {r.get('goodput_tps')} tok/s vs offered "
+                f"{r.get('offered_tps')} tok/s; shed {r.get('shed')}; "
+                f"timeouts {r.get('timeouts')}")
+    return lines
+
+
 def counters_section(records: list[dict]) -> list[str]:
     merged: dict[str, int] = {}
     for r in records:
@@ -212,6 +269,11 @@ def main() -> int:
                          "has >=1 step span")
     ap.add_argument("--require-zero-drift", action="store_true",
                     help="fail if any drift event is present")
+    ap.add_argument("--require-event", action="append", default=[],
+                    metavar="TYPE",
+                    help="fail unless >=1 event of TYPE is present "
+                         "(repeatable; e.g. --require-event shed asserts an "
+                         "overload run actually shed)")
     args = ap.parse_args()
 
     torn: list[int] = []
@@ -242,6 +304,8 @@ def main() -> int:
     drift_lines, n_drift = drift_section(records)
     for line in drift_lines:
         print(line)
+    for line in serving_section(records):
+        print(line)
     for line in counters_section(records):
         print(line)
     for line in timeline_section(records):
@@ -260,6 +324,11 @@ def main() -> int:
             failures.append("no step spans at all")
     if args.require_zero_drift and n_drift:
         failures.append(f"{n_drift} drift event(s) present")
+    if args.require_event:
+        present = {event_type(r) for r in records}
+        for want in args.require_event:
+            if want not in present:
+                failures.append(f"required event type {want!r} absent")
 
     if failures:
         for f in failures:

@@ -53,6 +53,7 @@ QUIET_EVENTS = (
     "dryrun_combo",
     "perf_record",
     "schedule",
+    "serve_step",
 )
 
 # Schema registry: required fields per event type. ``scripts/obs_report.py``
@@ -81,6 +82,17 @@ EVENT_FIELDS: dict[str, tuple[str, ...]] = {
     "counters": ("counters",),
     "dryrun_combo": ("phase", "lower_s", "compile_s"),
     "perf_record": ("name",),
+    # Serving-engine lifecycle (repro/serving/engine.py; docs/serving.md).
+    # Latencies are virtual-clock seconds — the engine runs on an explicit
+    # `now` so seeded traffic replays produce identical event streams.
+    "admit": ("request", "tenant", "blocks", "queue_wait_s"),
+    "reject": ("request", "tenant", "reason"),
+    "shed": ("request", "tenant", "reason"),
+    "cancel": ("request", "tenant", "reason", "tokens"),
+    "complete": ("request", "tenant", "tokens", "ttft_s", "tpot_s"),
+    "health": ("state", "prev", "pressure"),
+    "serve_step": ("step", "active", "queued", "blocks_free"),
+    "serve_report": ("offered", "completed", "goodput_tps"),
 }
 
 

@@ -1,1 +1,16 @@
-"""repro.serving"""
+"""repro.serving — inference half of the system.
+
+``serve_step``: single-batch prefill + decode loop (the seed path, kept as
+the correctness baseline). ``engine``: the continuous-batching serving
+engine with admission control, deadlines, and graceful degradation.
+``kvcache``: block-granular paged KV pool shared by the engine.
+"""
+
+from repro.serving.engine import (  # noqa: F401
+    EngineConfig,
+    Request,
+    ServingEngine,
+    SERVE_EVENTS,
+)
+from repro.serving.kvcache import BlockPool, KVCacheError, PagedKVCache  # noqa: F401
+from repro.serving.serve_step import generate, serve_step  # noqa: F401

@@ -45,15 +45,36 @@ def serve_step(
 
     Returns (next_token (B,1), logits (B,1,V), new_cache).
     """
+    if temperature > 0.0 and rng is None:
+        # Refuse to silently change semantics: sampling was requested, so
+        # falling back to greedy would be a correctness bug, not a default.
+        raise ValueError(
+            f"serve_step: temperature={temperature} requires an rng key; "
+            f"pass rng= or set temperature=0.0 for greedy decoding")
     logits, new_cache = decode_step(
         params, token, cache, pos, cfg, ctx=ctx, encoder_out=encoder_out
     )
     logits_f = logits.astype(jnp.float32)
-    if temperature > 0.0 and rng is not None:
+    if temperature > 0.0:
         next_token = jax.random.categorical(rng, logits_f / temperature, axis=-1)
     else:
         next_token = jnp.argmax(logits_f, axis=-1)
     return next_token.astype(jnp.int32), logits, new_cache
+
+
+@functools.lru_cache(maxsize=None)
+def compiled_serve_step(cfg: ModelConfig, ctx: ShardCtx, temperature: float):
+    """The jitted decode step, cached per (cfg, ctx, temperature).
+
+    ``generate()`` used to rebuild ``jax.jit(functools.partial(...))`` on
+    every call — a fresh jit wrapper has an empty compilation cache, so
+    every ``generate()`` retraced and recompiled the step. Both ``cfg``
+    (frozen dataclass) and ``ctx`` (NamedTuple) are hashable, so repeated
+    calls now share one compiled executable per configuration.
+    """
+    return jax.jit(
+        functools.partial(serve_step, cfg=cfg, ctx=ctx, temperature=temperature)
+    )
 
 
 def generate(
@@ -84,10 +105,7 @@ def generate(
 
         encoder_out = encode(params["encoder"], batch["audio_frames"], cfg, ctx)
 
-    step = jax.jit(
-        functools.partial(serve_step, cfg=cfg, ctx=ctx, temperature=temperature),
-        static_argnames=(),
-    )
+    step = compiled_serve_step(cfg, ctx, temperature)
     token = jnp.argmax(logits_p[:, -1:, :].astype(jnp.float32), axis=-1).astype(jnp.int32)
     toks = [token]
     rng = jax.random.PRNGKey(seed)

@@ -19,6 +19,20 @@ Fault kinds:
 * ``kill_mid_save@K`` — same, but between the array-file writes, leaving a
   torn tmp dir (which restore must never pick up).
 
+Serving-path faults (consumed by ``repro.serving.engine``, same grammar):
+
+* ``slow_step@NxS`` — host-level: the engine sleeps S wall seconds (default
+  0.05) inside scheduler iteration N, simulating a straggler / preempted
+  decode step. Virtual-clock event order is untouched, so replays stay
+  deterministic; the stall shows up in wall-time spans.
+* ``corrupt_cache@N`` — device-level: at iteration N the engine poisons one
+  active slot's first KV block with NaN. The engine's per-slot logit guard
+  must cancel exactly that request (``cancel`` event, reason ``corrupt``)
+  and scrub its blocks; co-batched requests are unaffected.
+* ``kill_in_decode@N`` — process-level: SIGKILL from inside the decode loop
+  at the first scheduler iteration >= N — the telemetry trail must survive
+  (``scripts/chaos_run.telemetry_failures`` containment check).
+
 File-corruption helpers (:func:`truncate_file`, :func:`bitflip_file`)
 simulate disk-level damage to existing snapshots; the checkpoint layer's
 CRC manifest must reject both.
@@ -36,13 +50,15 @@ import jax.numpy as jnp
 import numpy as np
 
 GRAD_KINDS = ("nan_grads", "inf_grads", "spike_loss")
-KILL_KINDS = ("kill_in_save", "kill_mid_save")
-KINDS = GRAD_KINDS + KILL_KINDS
+SERVE_KINDS = ("slow_step", "corrupt_cache")
+KILL_KINDS = ("kill_in_save", "kill_mid_save", "kill_in_decode")
+KINDS = GRAD_KINDS + SERVE_KINDS + KILL_KINDS
 
-# checkpoint.save crash points, in write order
+# crash points, in write order (checkpoint) / dispatch order (serving)
 _KILL_POINT = {
     "kill_mid_save": "checkpoint.mid_write",
     "kill_in_save": "checkpoint.pre_finalize",
+    "kill_in_decode": "serve.decode",
 }
 
 
@@ -50,10 +66,10 @@ _KILL_POINT = {
 class Fault:
     kind: str
     step: int
-    scale: float = 8.0  # spike_loss multiplier
+    scale: float = 8.0  # spike_loss multiplier / slow_step stall seconds
 
     def spec(self) -> str:
-        if self.kind == "spike_loss":
+        if self.kind in ("spike_loss", "slow_step"):
             return f"{self.kind}@{self.step}x{self.scale:g}"
         return f"{self.kind}@{self.step}"
 
@@ -85,7 +101,8 @@ class FaultPlan:
                 continue
             try:
                 kind, rest = item.split("@", 1)
-                scale = 8.0
+                # per-kind scale defaults: spike multiplier vs stall seconds
+                scale = 0.05 if kind == "slow_step" else 8.0
                 if "x" in rest:
                     rest, s = rest.split("x", 1)
                     scale = float(s)
@@ -103,6 +120,15 @@ class FaultPlan:
         """The in-graph fault scheduled for this step, if any."""
         for f in self.faults:
             if f.kind in GRAD_KINDS and f.step == step:
+                return f
+        return None
+
+    def serve_fault(self, step: int) -> Optional[Fault]:
+        """The serving-path fault scheduled for scheduler iteration ``step``
+        (``slow_step`` / ``corrupt_cache``; kills go through
+        :func:`crash_point` with point ``"serve.decode"``)."""
+        for f in self.faults:
+            if f.kind in SERVE_KINDS and f.step == step:
                 return f
         return None
 
@@ -152,6 +178,7 @@ def crash_point(point: str, step: Optional[int] = None) -> None:
     env = {
         "checkpoint.pre_finalize": os.environ.get("REPRO_KILL_IN_SAVE"),
         "checkpoint.mid_write": os.environ.get("REPRO_KILL_MID_SAVE"),
+        "serve.decode": os.environ.get("REPRO_KILL_IN_DECODE"),
     }.get(point)
     if env is not None and step is not None and step >= int(env):
         kill = True
