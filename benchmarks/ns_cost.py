@@ -128,4 +128,43 @@ def run(quick: bool = False) -> list[str]:
                 f"{launches}_launches_per_orthogonalization",
                 backend="pallas", bucketing="on")
         )
+
+    # ---- Turbo-Muon: the spectral pre-scale buys back 2 NS iterations -----
+    # Baseline Muon runs the Frobenius-normalized K=5 chain; Turbo-Muon
+    # divides by a power-iteration sigma_max estimate first, which lands
+    # every singular value in the cubic's fast basin so K=3 suffices
+    # (core/variants.py: ns_steps_delta=-2). Measured the same way as the
+    # strategy rows above — trace-time launch deltas on fresh shapes, so
+    # the reduction is the compiled chain length, not a timing artifact.
+    from repro.core.muon import SPECTRAL_MARGIN
+    from repro.core.newton_schulz import spectral_norm_est
+
+    launch = {}
+    for name, steps, shape in (("muon", 5, (4, 80, 176)),
+                               ("turbo_muon", 3, (4, 88, 176))):
+        gt = jax.random.normal(jax.random.PRNGKey(4), shape, jnp.float32)
+
+        def orth_variant(x, k=steps, turbo=name == "turbo_muon"):
+            if turbo:
+                sigma = spectral_norm_est(x).astype(x.dtype)
+                x = x / (sigma * SPECTRAL_MARGIN + 1e-7)
+                return orthogonalize(x, steps=k, backend="pallas",
+                                     strategy="fused_iter", normalize=False)
+            return orthogonalize(x, steps=k, backend="pallas",
+                                 strategy="fused_iter")
+
+        before = fused.launch_count()
+        us = timeit(orth_variant, gt, warmup=1, iters=2)
+        launch[name] = fused.launch_count() - before
+        rows.append(
+            row(f"ns_{name}_fused_iter_stack4_{shape[-2]}x{shape[-1]}", us,
+                f"{launch[name]}_launches_K{steps}",
+                backend="pallas", bucketing="on")
+        )
+    reduced = launch["turbo_muon"] < launch["muon"]
+    rows.append(
+        row("ns_turbo_launch_reduction", 0.0,
+            f"launches_{launch['turbo_muon']}_vs_{launch['muon']}"
+            + ("_ok" if reduced else "_DEGRADED"))
+    )
     return rows

@@ -7,19 +7,21 @@ for the paper artifact it reproduces):
   optimizer_step — Sec 2.2 per-optimizer step cost
   dion_cost      — Sec C MuonBP-vs-Dion cost model
   comm_volume    — Table 4 (throughput): optimizer collective bytes from HLO
-  convergence    — Tables 2/3: Muon/BlockMuon/MuonBP/Dion/AdamW losses
+  convergence    — Tables 2/3: Muon/BlockMuon/MuonBP/variants/Dion/AdamW losses
   period_sweep   — Figure 1: loss vs period x blocking degree
   param_norms    — Figure 2/8 + Table 6: parameter-norm growth
   two_stepsize   — Theorem 2: tied vs untied stepsizes
   roofline       — Sec Roofline: terms per (arch x shape x mesh) from dryrun
 
-A ``--quick`` pass over the full module list also writes a ``BENCH_pr8.json``
+A ``--quick`` pass over the full module list also writes a ``BENCH_pr10.json``
 perf snapshot (rows + computed regression markers) so the repo carries a
 bench trajectory; ``scripts/ci.sh`` fails when any *tracked* ``BENCH_*.json``
 carries a non-empty ``regressions`` list. Markers now also compare byte
-columns against the previous snapshot (``BENCH_pr7.json``) — a row present
+columns against the previous snapshot (``BENCH_pr8.json``) — a row present
 in both passes must not move more collective bytes than before — and flag
-``DEGRADED`` derived rows (the staggered-vs-synchronous convergence A/B).
+``DEGRADED`` derived rows (the staggered-vs-synchronous convergence A/B,
+the per-variant convergence A/Bs, the Turbo-Muon launch-reduction row,
+and the Dion program's zero-gather check).
 ``--bench-json PATH`` overrides the snapshot path (pass ``''`` to
 disable). Timing rows carry span-layer ``p50_us``/``p95_us`` percentiles
 (``common.timeit_stats``) where the module measures wall time.
@@ -51,8 +53,8 @@ MODULES = [
     "roofline",
 ]
 
-BENCH_SNAPSHOT = "BENCH_pr8.json"
-BASELINE_SNAPSHOT = "BENCH_pr7.json"  # previous PR's tracked snapshot
+BENCH_SNAPSHOT = "BENCH_pr10.json"
+BASELINE_SNAPSHOT = "BENCH_pr8.json"  # previous PR's tracked snapshot
 
 
 def parse_rows(lines: list[str]) -> list[dict]:
@@ -151,7 +153,7 @@ def write_snapshot(path: str, rows: list[dict], quick: bool) -> None:
     baseline = os.path.join(os.path.dirname(__file__), "..", BASELINE_SNAPSHOT)
     snap = {
         "schema": 1,
-        "pr": 8,
+        "pr": 10,
         "quick": quick,
         "columns": list(COLUMNS),
         "rows": rows,
@@ -170,8 +172,8 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated module list")
     ap.add_argument("--bench-json", default=None,
                     help="write a JSON snapshot of the rows + regression "
-                         "markers ('' disables; default: BENCH_pr8.json on a "
-                         "full --quick pass)")
+                         "markers ('' disables; default: BENCH_pr10.json on "
+                         "a full --quick pass)")
     args = ap.parse_args()
     quick = args.quick or os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
     only = args.only or os.environ.get("REPRO_BENCH_ONLY")

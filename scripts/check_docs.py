@@ -14,7 +14,10 @@ XLA_FLAGS/device state):
   ``docs/serving.md``;
 * every event type the serving engine emits (``SERVE_EVENTS`` in
   ``repro/serving/engine.py``) appears in ``docs/serving.md`` AND is
-  registered in ``EVENT_FIELDS`` — the two registries cannot drift apart.
+  registered in ``EVENT_FIELDS`` — the two registries cannot drift apart;
+* every optimizer variant registered in ``repro.core.variants.VARIANTS``
+  appears in ``docs/operators-guide.md`` — add a variant, document it,
+  or CI fails.
 
 Run by scripts/ci.sh.
 """
@@ -37,6 +40,7 @@ SERVE_GUIDE = REPO / "docs" / "serving.md"
 BUS_SRC = REPO / "src" / "repro" / "obs" / "bus.py"
 SERVE_SIM = REPO / "scripts" / "serve_sim.py"
 ENGINE_SRC = REPO / "src" / "repro" / "serving" / "engine.py"
+VARIANTS_SRC = REPO / "src" / "repro" / "core" / "variants.py"
 
 # every long option mentioned in an add_argument call (aliases included)
 _FLAG_RE = re.compile(r"add_argument\(\s*((?:\"--[\w-]+\",?\s*)+)")
@@ -69,6 +73,20 @@ def serve_event_types() -> list[str]:
     if not m:
         raise SystemExit(f"could not locate SERVE_EVENTS in {ENGINE_SRC}")
     return re.findall(r"\"([\w-]+)\"", m.group(1))
+
+
+def variant_names() -> list[str]:
+    """Registered optimizer-variant names from core/variants.py, by regex.
+
+    The VARIANTS dict is written with one quoted key per line and the
+    closing brace at column 0 (documented in its module docstring) so
+    this stays a source-level check like the others.
+    """
+    src = VARIANTS_SRC.read_text()
+    m = re.search(r"VARIANTS[^=]*=\s*\{(.*?)\n\}", src, re.S)
+    if not m:
+        raise SystemExit(f"could not locate VARIANTS in {VARIANTS_SRC}")
+    return re.findall(r"^\s*\"([\w-]+)\":", m.group(1), re.M)
 
 
 def main() -> int:
@@ -122,6 +140,15 @@ def main() -> int:
                 f"serving/engine.py: event type {ev!r} emitted but not "
                 f"registered in obs/bus.py EVENT_FIELDS")
 
+    variants = variant_names()
+    for name in variants:
+        # Require the literal backtick form (`muon`, `turbo_muon`, ...) so
+        # prose uses of "muon" don't count as documenting a variant.
+        if f"`{name}`" not in guide:
+            failures.append(
+                f"core/variants.py: variant {name!r} not documented in "
+                f"docs/operators-guide.md")
+
     if failures:
         for f in failures:
             print(f, file=sys.stderr)
@@ -130,7 +157,9 @@ def main() -> int:
           f"docs/operators-guide.md; {obs_total} obs flags and "
           f"{len(events)} event types documented in docs/observability.md; "
           f"{len(serve_flags)} serve_sim flags and {len(serve_events)} "
-          f"serving event types documented in docs/serving.md")
+          f"serving event types documented in docs/serving.md; "
+          f"{len(variants)} optimizer variants documented in "
+          f"docs/operators-guide.md")
     return 0
 
 

@@ -122,6 +122,31 @@ python scripts/obs_report.py /tmp/repro_stagger/run.jsonl \
 echo "== staggered parity + per-residue HLO audit (8 host devices, slow) =="
 python -m pytest -q tests/test_stagger.py -m slow
 
+echo "== optimizer-variant zoo: 8-device engine parity (slow) =="
+# Every registered variant through the shard_map engine: ZeRO-1 bitwise
+# parity per phase, zero block-phase optimizer gathers, plan-exact full
+# phases, NorMuon's second moment under the 36/16 flatten fallback, and
+# the Dion factor program's zero-gather HLO.
+python -m pytest -q tests/test_variants_distributed.py -m slow
+
+echo "== optimizer-variant quick convergence gate =="
+# benchmarks/convergence.py races the variants under the muonbp/adamw A/B
+# gates; a DEGRADED derived row (or module crash) fails CI here, before
+# the snapshot stage ever sees it.
+out=$(REPRO_BENCH_ONLY=convergence python -m benchmarks.run --quick)
+echo "$out"
+if echo "$out" | grep -qE "_FAILED|DEGRADED"; then
+    echo "variant convergence gate failed (see rows above)" >&2
+    exit 1
+fi
+
+echo "== optimizer-variant launcher smoke (every variant end-to-end) =="
+for v in muon turbo_muon normuon dion; do
+    python -m repro.launch.train \
+        --arch granite-8b --reduced --steps 2 --batch 2 --seq 32 --period 2 \
+        --optimizer-variant "$v" --log-every 1 > /dev/null
+done
+
 echo "== serving smoke (overload burst + fault -> obs_report) =="
 # Seeded open-loop drive of the continuous-batching engine: a 6x burst
 # into a 2-slot engine with a slow_step fault injected mid-burst. The
@@ -145,7 +170,7 @@ python scripts/check_docs.py
 echo "== quick benchmarks (ns_cost, optimizer_step) =="
 out=$(REPRO_BENCH_ONLY=ns_cost,optimizer_step python -m benchmarks.run --quick)
 echo "$out"
-if echo "$out" | grep -q "_FAILED"; then
-    echo "benchmark module failed" >&2
+if echo "$out" | grep -qE "_FAILED|DEGRADED"; then
+    echo "benchmark module failed or degraded (ns_turbo_launch_reduction)" >&2
     exit 1
 fi

@@ -130,14 +130,20 @@ class NSEngineConfig:
     "staggered": each bucket goes full on its own step-residue — one
     mixed-phase program per residue, flattening the p-step DCN burst into
     a per-step trickle; requires the shard_map engine and a period >= 2).
+    ``variant`` selects the optimizer variant program compiled through the
+    same machinery (``core/variants.py``: "muon" baseline, "turbo_muon"
+    spectral preconditioning + reduced NS K, "normuon" neuron-wise
+    second-moment epilogue, "dion" low-rank).
     Env overrides: ``REPRO_NS_BACKEND``, ``REPRO_NS_STRATEGY``,
-    ``REPRO_NS_BUCKETING=0``, ``REPRO_FULL_SCHEDULE``.
+    ``REPRO_NS_BUCKETING=0``, ``REPRO_FULL_SCHEDULE``,
+    ``REPRO_OPTIMIZER_VARIANT``.
     """
 
     backend: str = "jnp"          # "jnp" | "pallas"
     strategy: str = "auto"        # "auto" | "jnp" | "fused_chain" | "fused_iter" | "tiled"
     bucketing: bool = True
     full_schedule: str = "pipelined"  # "pipelined" | "barrier" | "staggered"
+    variant: str = "muon"         # "muon" | "turbo_muon" | "normuon" | "dion"
 
     @classmethod
     def from_env(cls) -> "NSEngineConfig":
@@ -149,6 +155,7 @@ class NSEngineConfig:
             bucketing=os.environ.get("REPRO_NS_BUCKETING", "1").lower()
             not in ("0", "false", "off"),
             full_schedule=os.environ.get("REPRO_FULL_SCHEDULE", cls.full_schedule),
+            variant=os.environ.get("REPRO_OPTIMIZER_VARIANT", cls.variant),
         )
 
 

@@ -24,13 +24,23 @@ from repro.core.newton_schulz import (
     orthogonalize,
     orthogonalize_jnp,
     orthogonality_error,
+    spectral_norm_est,
 )
+from repro.core.variants import VARIANTS, VariantSpec, build_variant
+from repro.core.variants import get as get_variant
+from repro.core.variants import names as variant_names
 
 __all__ = [
     "adamw",
     "apply_updates",
     "BlockSpec2D",
     "block_muon",
+    "build_variant",
+    "get_variant",
+    "spectral_norm_est",
+    "VariantSpec",
+    "VARIANTS",
+    "variant_names",
     "block_spec_from_partition",
     "bucketed_orthogonalize",
     "combine",

@@ -6,7 +6,7 @@ amortized power iteration:
 
     B = M + G                      (momentum + fresh gradient)
     P = B V                        (m x r)
-    Q = orthonormalize(P)          (QR)
+    Q = orthonormalize(P)          (polar factor)
     R = B^T Q                      (n x r)
     M <- B - (1 - mu) Q R^T        (error feedback keeps the residual)
     V <- column_normalize(R)
@@ -15,16 +15,32 @@ amortized power iteration:
 Communication never scales with m*n — only with (m+n) r — which is Dion's
 selling point; the cost-model comparison against MuonBP lives in
 ``benchmarks/dion_cost.py`` (paper Sec C).
+
+Revived as a *program* (``core/variants.py`` registers it as the
+``dion`` variant): the orthonormalization of ``P = B V`` runs through the
+same compiled :class:`repro.core.program.UpdateProgram` as every Muon
+variant — Newton-Schulz polar factor instead of QR (NS iterates the small
+r side, so the chain costs O(m r^2)), bucketed across leaves, kernel plans
+recorded per bucket, and executable through BOTH engine paths. Under the
+shard_map engine the program compiles against :class:`_FactorEngineView`:
+the P factors are tiny and replicated, so the region has ZERO gathers —
+the compiled CommPlan prices 0 B on every phase and the HLO audit holds
+trivially, which is exactly Dion's claim, now stated in the same
+accounting as MuonBP's.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.core.muon import Optimizer, _as_schedule
+from repro.core import newton_schulz
+from repro.core import program as program_lib
+from repro.core.muon import SPECTRAL_MARGIN, Optimizer, _as_schedule, _path_key
 
 
 class DionState(NamedTuple):
@@ -37,6 +53,41 @@ def _column_normalize(x, eps=1e-8):
     return x / (jnp.linalg.norm(x, axis=-2, keepdims=True) + eps)
 
 
+@dataclasses.dataclass(frozen=True)
+class _FactorEngineView:
+    """Engine view the Dion program compiles against.
+
+    The NS inputs are the projected factors ``P = B V`` — (m, r) with r
+    tiny — not the momentum matrices, so their specs are fully replicated:
+    the compiled program has no gather CommOps, predicts 0 B on every
+    phase, and still executes inside the real engine's shard_map region
+    (``run_program`` delegates), so the HLO audit sees the same
+    zero-collective region it asserts for block steps.
+    """
+
+    inner: Any
+
+    @property
+    def axis_sizes(self):
+        return self.inner.axis_sizes
+
+    @property
+    def mesh(self):
+        return self.inner.mesh
+
+    def spec_for(self, key, ndim: int) -> P:
+        return P(*(None,) * ndim)
+
+    def flatten_for(self, key):
+        return None
+
+    def state_shape_for(self, key, shape: tuple) -> tuple:
+        return tuple(shape)
+
+    def run_program(self, prog, leaves, orth):
+        return self.inner.run_program(prog, leaves, orth)
+
+
 def dion(
     learning_rate,
     *,
@@ -44,9 +95,76 @@ def dion(
     momentum: float = 0.95,
     weight_decay: float = 0.0,
     rms_target: float = 0.2,
+    comm: Optional[Any] = None,
+    full_schedule: Optional[str] = None,
+    bucketing: bool = True,
+    ns_backend: Optional[str] = None,
+    ns_strategy: Optional[str] = None,
+    ns_steps: int = 6,
+    period: Optional[int] = None,
 ) -> Optimizer:
+    """Build the Dion low-rank optimizer as a compiled update program.
+
+    ``comm``/``bucketing``/``ns_backend``/``ns_strategy``/``ns_steps`` mean
+    what they mean for :func:`repro.core.muon.muon` — they configure the
+    compiled program that orthonormalizes the projected factors.
+    ``full_schedule`` accepts 'barrier'/'pipelined' (with no gathers to
+    overlap they are equivalent; kept so the launchers can pass their flag
+    through uniformly) and rejects 'staggered' — a low-rank update has no
+    per-leaf full-step gathers to stagger. ``period`` is accepted and
+    ignored: Dion performs the same amortized power iteration every step,
+    so 'block' and 'full' phases compile to the same work.
+    """
     lr_fn = _as_schedule(learning_rate)
     mu = momentum
+    del period  # same update every step — no block-periodic structure
+    if full_schedule is None:
+        import os
+
+        full_schedule = os.environ.get("REPRO_FULL_SCHEDULE", "pipelined")
+    if full_schedule == "staggered":
+        raise ValueError(
+            "dion has no per-leaf full-step gathers to stagger; use "
+            "full_schedule='pipelined' or 'barrier'"
+        )
+    if full_schedule not in program_lib.FULL_SCHEDULES:
+        raise ValueError(
+            f"full_schedule must be one of {program_lib.FULL_SCHEDULES}, "
+            f"got {full_schedule!r}"
+        )
+    engine = _FactorEngineView(comm) if comm is not None else None
+
+    programs: dict = {}
+
+    def _program_for(leaf_specs: tuple, backend: str) -> program_lib.UpdateProgram:
+        cache_key = (leaf_specs, backend)
+        if cache_key not in programs:
+            programs[cache_key] = program_lib.compile_program(
+                leaf_specs,
+                bucketing=bucketing,
+                backend=backend,
+                strategy=ns_strategy,
+                engine=engine,
+                full_schedule=full_schedule,
+                ns_steps=ns_steps,
+            )
+        return programs[cache_key]
+
+    def _orth(u: jax.Array, strategy: Optional[str] = None) -> jax.Array:
+        # Spectral pre-scale (shared with Turbo-Muon): the polar factor here
+        # must be TIGHT — Dion's error feedback keeps the residual
+        # ``B - Q Q^T B`` in the momentum, so any orthonormality deficit in
+        # Q re-enters the state and compounds. A Frobenius-normalized start
+        # puts sigma_max near 1/sqrt(r) and K=5 stalls the power iteration;
+        # dividing by the spectral-norm estimate lands every singular value
+        # in the NS cubic's quadratic basin, where ``ns_steps=6`` recovers
+        # QR-grade orthonormality at O(m r^2) cost.
+        sigma = newton_schulz.spectral_norm_est(u).astype(u.dtype)
+        u = u / (sigma * SPECTRAL_MARGIN + 1e-7)
+        return newton_schulz.orthogonalize(
+            u, steps=ns_steps, backend=ns_backend, strategy=strategy,
+            normalize=False,
+        )
 
     def init(params):
         def init_leaf(p):
@@ -64,14 +182,44 @@ def dion(
         return DionState(momentum=zeros, basis=basis, count=jnp.zeros((), jnp.int32))
 
     def update(grads, state, params, phase: str = "block"):
-        del phase
+        if phase not in ("block", "full"):
+            raise ValueError(
+                f"dion phases are 'block' and 'full' (identical work), "
+                f"got {phase!r}"
+            )
         count = state.count + 1
         lr = lr_fn(count)
 
-        def per_param(g, m, v, p):
-            b = m + g.astype(jnp.float32)
-            pmat = b @ v                                  # (.., m, r)
-            q, _ = jnp.linalg.qr(pmat)                    # orthonormal (m, r)
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.momentum)
+        flat_v = treedef.flatten_up_to(state.basis)
+        keys = [
+            _path_key(path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+        ]
+
+        # ---- prologue: project every leaf down to its (m, r) factor ----
+        b_leaves = [m + g.astype(jnp.float32) for g, m in zip(flat_g, flat_m)]
+        p_factors = [b @ v for b, v in zip(b_leaves, flat_v)]
+
+        # ---- the compiled program: NS polar of every factor ------------
+        from repro.kernels import dispatch
+
+        backend = ns_backend if ns_backend is not None else dispatch.get_backend()
+        leaf_specs = tuple(
+            program_lib.LeafSpec(
+                key=key, shape=tuple(pf.shape),
+                dtype=str(jnp.dtype(pf.dtype).name), block=None,
+            )
+            for key, pf in zip(keys, p_factors)
+        )
+        program = _program_for(leaf_specs, backend)
+        q_leaves = program.execute(phase, p_factors, _orth)
+
+        # ---- epilogue: power-iteration bookkeeping + low-rank update ---
+        out = []
+        for q, b, v, p in zip(q_leaves, b_leaves, flat_v, flat_p):
             r_mat = jnp.swapaxes(b, -1, -2) @ q           # (.., n, r)
             new_m = b - (1.0 - mu) * (q @ jnp.swapaxes(r_mat, -1, -2))
             new_v = _column_normalize(r_mat)
@@ -80,13 +228,7 @@ def dion(
             upd = -lr * scale * (q @ jnp.swapaxes(new_v, -1, -2))
             if weight_decay:
                 upd = upd - lr * weight_decay * p.astype(jnp.float32)
-            return upd.astype(p.dtype), new_m, new_v
-
-        flat_p, treedef = jax.tree.flatten(params)
-        flat_g = treedef.flatten_up_to(grads)
-        flat_m = treedef.flatten_up_to(state.momentum)
-        flat_v = treedef.flatten_up_to(state.basis)
-        out = [per_param(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+            out.append((upd.astype(p.dtype), new_m, new_v))
         updates = treedef.unflatten([o[0] for o in out])
         new_m = treedef.unflatten([o[1] for o in out])
         new_v = treedef.unflatten([o[2] for o in out])

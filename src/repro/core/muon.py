@@ -59,6 +59,11 @@ Schedule = Callable[[jax.Array], jax.Array]
 class OptState(NamedTuple):
     momentum: PyTree
     count: jax.Array  # int32 step counter
+    # NorMuon only (``variant='normuon'``); None otherwise. None fields have
+    # no pytree leaves, so baseline programs, checkpoints, and sharding
+    # derivations are byte-identical to the two-field state.
+    second_moment: PyTree = None  # per-leaf (..., 1) neuron second moments
+    vcount: PyTree = None         # per-leaf int32 refresh counters
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +146,13 @@ def _rms_scale(m: int, n: int, target: float) -> float:
     return target * float(max(m, n)) ** 0.5
 
 
+# Turbo-Muon spectral pre-scale margin: the power-iteration estimate
+# converges to sigma_max from BELOW, so dividing by est*margin keeps every
+# singular value <= 1 with near-certainty — and the NS cubic's convergence
+# basin extends to sqrt(3), so even a few-percent undershoot stays safe.
+SPECTRAL_MARGIN = 1.01
+
+
 def _path_key(path) -> tuple[str, ...]:
     return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
 
@@ -164,6 +176,7 @@ def muon(
     comm: Optional[Any] = None,
     layer_shard: Optional[tuple] = None,
     full_schedule: Optional[str] = None,
+    variant: Any = None,
 ) -> Optimizer:
     """Build the Muon-family optimizer (paper Algorithm 1).
 
@@ -215,7 +228,27 @@ def muon(
         leaf goes full on its own offset and every step moves ~1/P of the
         full-step bytes. ``None`` reads ``REPRO_FULL_SCHEDULE`` and falls
         back to ``'pipelined'``. GSPMD programs ignore it.
+      variant: optimizer variant — a name from ``core.variants.VARIANTS``
+        ("muon" | "turbo_muon" | "normuon"), a VariantSpec, or None for the
+        baseline. The variant adjusts the NS chain length the program's
+        KernelPlans compile with (Turbo-Muon's K-2) and records its
+        precondition/epilogue stages on the plan: 'spectral_scale' divides
+        each packed stack by a power-iteration spectral-norm estimate and
+        skips the kernels' entry Frobenius normalization; 'neuron_norm'
+        applies the NorMuon second-moment row normalization after unpack
+        (row statistics refresh on full/due steps only, so block steps stay
+        collective-free; the extra ``second_moment``/``vcount`` state rides
+        ZeRO-1 and checkpointing like the momentum).
     """
+    from repro.core import variants as variants_lib
+
+    vspec = variants_lib.get(variant)
+    if vspec.low_rank:
+        raise ValueError(
+            f"variant {vspec.name!r} is a low-rank program; build it with "
+            "core.variants.build_variant (it routes to core.dion)"
+        )
+    eff_ns_steps = max(1, ns_steps + vspec.ns_steps_delta)
     lr_full_fn = _as_schedule(lr_full)
     lr_block_fn = _as_schedule(lr_block if lr_block is not None else lr_full)
     mu = momentum
@@ -266,8 +299,10 @@ def muon(
                 engine=comm,
                 layer_shard=layer_shard,
                 full_schedule=full_schedule,
-                ns_steps=ns_steps,
+                ns_steps=eff_ns_steps,
                 stagger_period=period if full_schedule == "staggered" else None,
+                precondition=vspec.precondition,
+                epilogue=vspec.epilogue,
             )
         return programs[cache_key]
 
@@ -299,15 +334,45 @@ def muon(
             out, NamedSharding(comm.mesh, spec)
         )
 
+    def _row_stat_shape(shape: tuple) -> tuple:
+        # NorMuon second moments: one statistic per output neuron (row) —
+        # the leaf shape with its last dim collapsed. Sub-matrix leaves
+        # keep their shape (the epilogue skips them).
+        return shape[:-1] + (1,) if len(shape) >= 2 else shape
+
     def init(params: PyTree) -> OptState:
         zeros = jax.tree_util.tree_map_with_path(
             lambda path, p: jnp.zeros(_state_shape(path, p), jnp.float32), params
         )
-        return OptState(momentum=zeros, count=jnp.zeros((), jnp.int32))
+        second = vcounts = None
+        if vspec.epilogue == "neuron_norm":
+            second = jax.tree_util.tree_map_with_path(
+                lambda path, p: jnp.zeros(
+                    _row_stat_shape(_state_shape(path, p)), jnp.float32
+                ),
+                params,
+            )
+            vcounts = jax.tree.map(
+                lambda p: jnp.zeros((), jnp.int32), params
+            )
+        return OptState(momentum=zeros, count=jnp.zeros((), jnp.int32),
+                        second_moment=second, vcount=vcounts)
 
     def _orth(u: jax.Array, strategy: Optional[str] = None) -> jax.Array:
+        if vspec.precondition == "spectral_scale":
+            # Turbo-Muon: land every singular value near 1 (inside the NS
+            # cubic's quadratic-convergence basin) by dividing by the
+            # spectral norm instead of the much larger Frobenius norm the
+            # kernels apply on entry — that's what buys the reduced K the
+            # program compiled with.
+            sigma = newton_schulz.spectral_norm_est(u).astype(u.dtype)
+            u = u / (sigma * SPECTRAL_MARGIN + 1e-7)
+            return newton_schulz.orthogonalize(
+                u, steps=eff_ns_steps, coeffs=ns_coeffs, backend=ns_backend,
+                strategy=strategy, normalize=False,
+            )
         return newton_schulz.orthogonalize(
-            u, steps=ns_steps, coeffs=ns_coeffs, backend=ns_backend,
+            u, steps=eff_ns_steps, coeffs=ns_coeffs, backend=ns_backend,
             strategy=strategy,
         )
 
@@ -368,14 +433,43 @@ def muon(
         program = _program_for(leaf_specs, backend)
         o_leaves = program.execute(phase, u_leaves, _orth)
 
+        prog_phase = program.phase(phase)
+        due = frozenset(prog_phase.due or ())
+
+        # ---- variant epilogue: NorMuon neuron-wise normalization --------
+        # Row second moments refresh ONLY on full/due steps (block-periodic,
+        # like the orthogonalization itself — a block-step refresh would
+        # need full-row statistics and re-introduce collectives the paper's
+        # schedule amortizes away); every step applies the current
+        # statistics as a local elementwise broadcast divide.
+        new_second = state.second_moment
+        new_vcount = state.vcount
+        if vspec.epilogue == "neuron_norm":
+            from repro.kernels import normuon as normuon_lib
+
+            v_leaves = jax.tree.leaves(state.second_moment)
+            c_leaves = jax.tree.leaves(state.vcount)
+            o_out, v_out, c_out = [], [], []
+            for i, (o, v, c) in enumerate(zip(o_leaves, v_leaves, c_leaves)):
+                if o.ndim < 2:
+                    o_out.append(o); v_out.append(v); c_out.append(c)
+                    continue
+                refresh = phase == "full" or i in due
+                o_n, v_n, c_n = normuon_lib.apply_neuron_norm(
+                    o, v, c, beta2=vspec.beta2, eps=vspec.stat_eps,
+                    refresh=refresh, backend=backend,
+                )
+                o_out.append(o_n); v_out.append(v_n); c_out.append(c_n)
+            o_leaves = o_out
+            new_second = jax.tree_util.tree_unflatten(treedef, v_out)
+            new_vcount = jax.tree_util.tree_unflatten(treedef, c_out)
+
         # ---- epilogue: RMS-matched scaling + weight decay + repack ----
         # Two-stepsize rule per leaf (Theorem 2): on a mixed staggered
         # phase the due leaves take the full-step LR (they were fully
         # orthogonalized, eff_dims = global dims) and everyone else the
         # block LR — each leaf sees lr_full exactly once per period, same
         # as the synchronous schedule, just offset in time.
-        prog_phase = program.phase(phase)
-        due = frozenset(prog_phase.due or ())
         upd_leaves = []
         for i, (o, p) in enumerate(zip(o_leaves, p_leaves)):
             m_eff, n_eff = prog_phase.eff_dims(i)
@@ -386,7 +480,8 @@ def muon(
                 upd = upd - lr_i * weight_decay * p.astype(jnp.float32)
             upd_leaves.append(upd.astype(p.dtype))
         updates = jax.tree_util.tree_unflatten(treedef, upd_leaves)
-        return updates, OptState(momentum=new_m, count=count)
+        return updates, OptState(momentum=new_m, count=count,
+                                 second_moment=new_second, vcount=new_vcount)
 
     return Optimizer(init=init, update=update)
 

@@ -53,29 +53,35 @@ def orthogonalize(
     eps: float = 1e-7,
     backend: str | None = None,
     strategy: str | None = None,
+    normalize: bool = True,
 ) -> jax.Array:
     """Approximate ``Orth(g)`` via the selected execution backend.
 
     ``backend=None`` defers to the registry default (see module docstring);
     ``strategy`` pins the kernel within the backend (``dispatch.STRATEGIES``
     — the compiled UpdateProgram passes its per-bucket plan here so the VMEM
-    fit is decided once, not per step). All backends share the semantics
-    documented on ``orthogonalize_jnp``.
+    fit is decided once, not per step). ``normalize=False`` skips the entry
+    Frobenius normalization: the caller guarantees the spectral norm is
+    already < sqrt(3) (the cubic NS basin) — Turbo-Muon's spectral
+    preconditioner uses this so its tighter scaling survives into the
+    iterations instead of being overwritten. All backends share the
+    semantics documented on ``orthogonalize_jnp``.
     """
     from repro.kernels import dispatch  # late import: kernels layer is optional
 
     return dispatch.orthogonalize(
         g, steps=steps, coeffs=coeffs, eps=eps, backend=backend,
-        strategy=strategy,
+        strategy=strategy, normalize=normalize,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "coeffs", "eps"))
+@functools.partial(jax.jit, static_argnames=("steps", "coeffs", "eps", "normalize"))
 def orthogonalize_jnp(
     g: jax.Array,
     steps: int = 5,
     coeffs=PAPER_COEFFS,
     eps: float = 1e-7,
+    normalize: bool = True,
 ) -> jax.Array:
     """Approximate ``Orth(g)`` over the trailing two dims (pure-jnp engine).
 
@@ -92,13 +98,40 @@ def orthogonalize_jnp(
     transpose = m > n
     if transpose:
         x = jnp.swapaxes(x, -1, -2)
-    # Normalize so the spectral norm is <= 1 (fro-norm upper bounds spectral).
-    norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
-    x = x / (norm + eps)
+    if normalize:
+        # Normalize so the spectral norm is <= 1 (fro upper bounds spectral).
+        norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
+        x = x / (norm + eps)
     x = _ns_iterations(x, steps, coeffs)
     if transpose:
         x = jnp.swapaxes(x, -1, -2)
     return x.astype(orig_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def spectral_norm_est(x: jax.Array, iters: int = 6) -> jax.Array:
+    """Spectral-norm estimate over the trailing two dims (power iteration).
+
+    Deterministic start vector (uniform, so no RNG plumbing and identical
+    numerics across call sites), batched over leading dims. Returns shape
+    ``(..., 1, 1)`` for direct broadcast division. The estimate converges to
+    sigma_max from below, so callers divide by ``est * margin`` — and the NS
+    cubic's basin extends to sqrt(3), so a ~1% margin leaves enormous
+    headroom. Used by the Turbo-Muon preconditioner: dividing by ~sigma_max
+    lands every singular value near 1 — deep inside the cubic's fast basin —
+    where the stock Frobenius normalization shrinks sigma_max to as little
+    as 1/sqrt(rank), which is what makes the first NS iterations slow.
+    """
+    x = x.astype(jnp.float32)
+    n = x.shape[-1]
+    v = jnp.ones(x.shape[:-2] + (n, 1), jnp.float32) / jnp.sqrt(jnp.float32(n))
+    xt = jnp.swapaxes(x, -1, -2)
+    for _ in range(iters):
+        w = x @ v
+        v = xt @ w
+        v = v / (jnp.linalg.norm(v, axis=(-2, -1), keepdims=True) + 1e-20)
+    w = x @ v
+    return jnp.linalg.norm(w, axis=(-2, -1), keepdims=True)
 
 
 def orthogonality_error(x: jax.Array) -> jax.Array:

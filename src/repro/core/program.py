@@ -216,11 +216,23 @@ class KernelPlan:
     merge (``dispatch.shared_launch_groups``): buckets with the same unit
     shape but different dtypes share this one launch, cast to the promoted
     compute dtype on pack and back per leaf on unpack.
+
+    Variant pipeline stages (``core/variants.py``) are part of the plan:
+    ``ns_steps`` is the *effective* chain length K this bucket's kernel
+    compiles with (None = the caller's default — pre-variant programs),
+    ``precondition`` names a pre-NS stage ('spectral_scale': divide by a
+    power-iteration spectral-norm estimate and skip the kernels' entry
+    Frobenius normalization, buying the reduced K), and ``epilogue`` names
+    a post-NS stage ('neuron_norm': the NorMuon second-moment row
+    normalization, applied by ``muon.update`` after unpack).
     """
 
     backend: str
     strategy: str
     merged_dtypes: tuple = ()
+    ns_steps: Optional[int] = None
+    precondition: Optional[str] = None
+    epilogue: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -463,10 +475,17 @@ class UpdateProgram:
                     f" merge={'+'.join(op.kernel.merged_dtypes)}"
                     if op.kernel.merged_dtypes else ""
                 )
+                variant = ""
+                if op.kernel.ns_steps is not None:
+                    variant += f" K={op.kernel.ns_steps}"
+                if op.kernel.precondition:
+                    variant += f" pre={op.kernel.precondition}"
+                if op.kernel.epilogue:
+                    variant += f" epi={op.kernel.epilogue}"
                 lines.append(
                     f"  [{op.mode}] {len(op.leaves)} leaf/leaves -> "
                     f"{op.packed_shape} {op.kernel.backend}/{op.kernel.strategy}"
-                    f"{merged} comm={comm}"
+                    f"{merged}{variant} comm={comm}"
                 )
             if prog.schedule is not None:
                 lines += ["  " + l for l in prog.schedule.describe()]
@@ -614,20 +633,27 @@ def _kernel_plan(
     *,
     vmem_budget: Optional[int] = None,
     merged_dtypes: tuple = (),
+    ns_steps: Optional[int] = None,
+    precondition: Optional[str] = None,
+    epilogue: Optional[str] = None,
 ) -> KernelPlan:
     from repro.kernels import dispatch
 
     name = backend if backend is not None else dispatch.get_backend()
+    extra = dict(
+        merged_dtypes=merged_dtypes, ns_steps=ns_steps,
+        precondition=precondition, epilogue=epilogue,
+    )
     if strategy is not None and strategy != "auto":
         if strategy not in dispatch.STRATEGIES:
             raise ValueError(
                 f"unknown NS strategy {strategy!r}; available: {dispatch.STRATEGIES}"
             )
-        return KernelPlan(backend=name, strategy=strategy, merged_dtypes=merged_dtypes)
+        return KernelPlan(backend=name, strategy=strategy, **extra)
     return KernelPlan(
         backend=name,
         strategy=dispatch.plan_strategy(packed_shape, name, vmem_budget=vmem_budget),
-        merged_dtypes=merged_dtypes,
+        **extra,
     )
 
 
@@ -860,6 +886,9 @@ def _compile_phase_gspmd(
     backend: Optional[str],
     strategy: Optional[str],
     layer_shard: Optional[tuple],
+    ns_steps: Optional[int] = None,
+    precondition: Optional[str] = None,
+    epilogue: Optional[str] = None,
 ) -> PhaseProgram:
     mode = "concat" if phase == "full" else "stack"
     leaf_execs: list[LeafExec] = []
@@ -889,7 +918,9 @@ def _compile_phase_gspmd(
                 leaves=tuple(members),
                 mode=mode,
                 kernel=_kernel_plan(
-                    packed, backend, strategy, merged_dtypes=merged
+                    packed, backend, strategy, merged_dtypes=merged,
+                    ns_steps=ns_steps, precondition=precondition,
+                    epilogue=epilogue,
                 ),
                 comm=comm,
                 packed_shape=packed,
@@ -911,6 +942,8 @@ def _compile_phase_engine(
     full_schedule: str = "pipelined",
     ns_steps: int = 5,
     full_leaves: Optional[frozenset] = None,
+    precondition: Optional[str] = None,
+    epilogue: Optional[str] = None,
 ) -> PhaseProgram:
     """Engine mode: plan on device-local (post-gather) shapes.
 
@@ -1035,6 +1068,8 @@ def _compile_phase_engine(
             kernel=_kernel_plan(
                 packed, backend, strategy,
                 vmem_budget=vmem_budget, merged_dtypes=merged,
+                ns_steps=ns_steps, precondition=precondition,
+                epilogue=epilogue,
             ),
             comm=comm,
             packed_shape=packed,
@@ -1059,6 +1094,8 @@ def compile_program(
     full_schedule: str = "pipelined",
     ns_steps: int = 5,
     stagger_period: Optional[int] = None,
+    precondition: Optional[str] = None,
+    epilogue: Optional[str] = None,
 ) -> UpdateProgram:
     """Compile the two-phase :class:`UpdateProgram` from static leaf info.
 
@@ -1092,10 +1129,18 @@ def compile_program(
         full ops and the rest block ops, in one pipelined body. GSPMD
         programs have no explicit gathers to schedule and always compile
         without one.
-      ns_steps: chain length, used only to price the schedule's overlap
-        windows (``plan.overlappable_ns_bytes``).
+      ns_steps: the *effective* chain length K every bucket's KernelPlan
+        records and the schedule's overlap windows are priced with
+        (``plan.overlappable_ns_bytes``) — optimizer variants pass their
+        adjusted K here (e.g. Turbo-Muon's K-2) so the compiled kernels
+        genuinely run fewer iterations.
       stagger_period: the MuonBP period p (>= 2) when
         ``full_schedule='staggered'``; ignored otherwise.
+      precondition: variant pre-NS stage name recorded on every KernelPlan
+        ('spectral_scale' — see ``core/variants.py``); interpreted by the
+        optimizer's ``orth`` callable, displayed in :meth:`summary`.
+      epilogue: variant post-NS stage name recorded on every KernelPlan
+        ('neuron_norm'); applied by ``muon.update`` after unpack.
     """
     if full_schedule not in FULL_SCHEDULES:
         raise ValueError(
@@ -1155,11 +1200,14 @@ def compile_program(
                 strategy=strategy, engine=engine, layer_shard=layer_shard,
                 full_schedule=full_schedule, ns_steps=ns_steps,
                 full_leaves=full_leaves,
+                precondition=precondition, epilogue=epilogue,
             )
         else:
             phases[phase] = _compile_phase_gspmd(
                 leaf_specs, phase, bucketing=bucketing, backend=backend,
                 strategy=strategy, layer_shard=layer_shard,
+                ns_steps=ns_steps, precondition=precondition,
+                epilogue=epilogue,
             )
     return UpdateProgram(
         leaf_specs=tuple(leaf_specs), phases=phases, engine=engine,

@@ -1,0 +1,120 @@
+"""Optimizer-variant registry: the Muon family compiled through UpdateProgram.
+
+MuonBP's contribution is an amortization schedule *around* orthogonalization,
+so every related-work variant that keeps "orthogonalize the momentum" as its
+core op drops into the same block-periodic, comm-accounted machinery. Each
+registered variant compiles to its own ordered BucketOps through
+``core.program.compile_program`` — same bucketing, same CommPlan pricing
+(block steps still predict 0 B), same HLO audit, same full-step schedules:
+
+* ``muon`` — the baseline MuonBP program (PR 3), K=5 NS iterations with the
+  entry Frobenius normalization.
+* ``turbo_muon`` — spectral preconditioning before ``orthogonalize``: each
+  matrix is divided by a power-iteration estimate of its spectral norm
+  (instead of its much larger Frobenius norm), landing every singular value
+  near 1 — inside the NS cubic's quadratic-convergence basin — so the chain
+  converges in K-2 iterations. The program's KernelPlans compile with the
+  reduced K: a fused_chain bucket genuinely runs 2 fewer steps in its one
+  launch, and a fused_iter bucket issues 2 fewer launches
+  (``fused.launch_count()`` reflects it; gated in benchmarks/ns_cost.py).
+* ``normuon`` — neuron-wise second-moment normalization as an NS-epilogue
+  stage (``kernels/normuon.py``: Pallas kernel + bitwise jnp reference).
+  The row statistics refresh only on full/due steps — block-periodic, like
+  the orthogonalization itself — so block steps stay collective-free; the
+  extra state rides ZeRO-1 sharding, checkpointing, and the
+  flatten-and-shard fallback (``distributed/zero1.py``).
+* ``dion`` — the revived low-rank comparison (``core/dion.py``): the m×r
+  projection B·V is orthonormalized by the SAME compiled NS program
+  machinery (polar factor), racing Dion under the one harness.
+
+``VARIANTS`` is parsed by ``scripts/check_docs.py`` (every registered name
+must appear in docs/operators-guide.md) — keep one quoted key per line and
+the closing brace at column 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSpec:
+    """Static description of one optimizer variant's compiled program.
+
+    ``ns_steps_delta`` adjusts the NS iteration count K the program's
+    KernelPlans compile with (floored at 1); ``precondition``/``epilogue``
+    name extra pipeline stages recorded on the KernelPlan (and visible in
+    ``UpdateProgram.summary()``); ``beta2``/``stat_eps`` parameterize the
+    NorMuon second-moment stage; ``low_rank`` routes to the Dion program.
+    """
+
+    name: str
+    ns_steps_delta: int = 0
+    precondition: Optional[str] = None
+    epilogue: Optional[str] = None
+    beta2: float = 0.95
+    stat_eps: float = 1e-8
+    low_rank: bool = False
+    description: str = ""
+
+
+VARIANTS = {
+    "muon": VariantSpec(
+        name="muon",
+        description="baseline MuonBP program (K=5, Frobenius entry norm)"),
+    "turbo_muon": VariantSpec(
+        name="turbo_muon",
+        ns_steps_delta=-2,
+        precondition="spectral_scale",
+        description="spectral preconditioning -> NS compiled with K-2"),
+    "normuon": VariantSpec(
+        name="normuon",
+        epilogue="neuron_norm",
+        description="neuron-wise second-moment NS epilogue (fused stage)"),
+    "dion": VariantSpec(
+        name="dion",
+        low_rank=True,
+        description="low-rank (rank-r) update; NS-polar through the program"),
+}
+
+
+def names() -> tuple[str, ...]:
+    return tuple(VARIANTS)
+
+
+def get(variant: Union[str, VariantSpec, None]) -> VariantSpec:
+    """Resolve a variant name (or pass a spec through; None -> baseline)."""
+    if variant is None:
+        return VARIANTS["muon"]
+    if isinstance(variant, VariantSpec):
+        return variant
+    try:
+        return VARIANTS[variant]
+    except KeyError:
+        raise ValueError(
+            f"unknown optimizer variant {variant!r}; available: {names()}"
+        ) from None
+
+
+def build_variant(variant: Union[str, VariantSpec], lr_full, lr_block=None, *,
+                  rank: int = 64, **muon_kwargs):
+    """Construct the variant's matrix optimizer (muon-family or dion).
+
+    ``muon_kwargs`` pass through to :func:`repro.core.muon.muon` for the
+    muon-family variants; the dion program accepts the shared subset
+    (comm/full_schedule/bucketing/ns_backend/ns_strategy/ns_steps/
+    weight_decay/rms_target/momentum) and ignores blocking-specific knobs
+    (a low-rank update has no block grid).
+    """
+    from repro.core.dion import dion as dion_fn
+    from repro.core.muon import muon as muon_fn
+
+    spec = get(variant)
+    if spec.low_rank:
+        dion_keys = ("momentum", "weight_decay", "rms_target", "comm",
+                     "full_schedule", "bucketing", "ns_backend", "ns_strategy",
+                     "ns_steps", "period")
+        kw = {k: v for k, v in muon_kwargs.items() if k in dion_keys}
+        return dion_fn(lr_full, rank=rank, **kw)
+    return muon_fn(lr_full, lr_block, variant=spec, **muon_kwargs)

@@ -108,11 +108,20 @@ def opt_specs(a_opt: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
     EXCEEDS its param's is recognized as the flatten-and-shard fallback
     (``muon.init`` padded it to a multiple of the ZeRO axes because the
     true lead dim does not divide them) and gets the padded-lead sharding.
+    A leaf shaped like its param with the last dim collapsed to 1 (NorMuon
+    row second moments, possibly lead-padded like the momentum) gets the
+    matching momentum layout with the collapsed dim unsharded.
     Leaves with no param match (step counters) are replicated.
     """
     sizes = sh.mesh_axis_sizes(mesh)
     axes = sh.zero1_axes(sizes, axis)
     index = _param_spec_index(a_params, pspecs)
+
+    def _row_stat(base: P, ndim: int) -> P:
+        # Row-statistic leaves (NorMuon second moments): the matching
+        # momentum layout with the collapsed last dim unsharded.
+        ent = list(base) + [None] * (ndim - len(tuple(base)))
+        return P(*ent[:-1], None)
 
     def spec(path, leaf):
         hit = _match_suffix(sh.path_names(path), index)
@@ -125,6 +134,18 @@ def opt_specs(a_opt: Any, a_params: Any, mesh: Mesh, *, pspecs: Any = None,
             if (zero1 and fl is not None
                     and tuple(leaf.shape) == fl.padded_shape(shape)):
                 return sh.flatten_momentum_spec(pspec, shape, fl)
+            if len(shape) >= 2 and tuple(leaf.shape) == tuple(shape[:-1]) + (1,):
+                return _row_stat(
+                    sh.momentum_spec(pspec, shape, sizes, zero1=zero1,
+                                     zero1_axis=axes, label=label),
+                    leaf.ndim,
+                )
+            if (zero1 and fl is not None and len(shape) >= 2
+                    and tuple(leaf.shape)
+                    == fl.padded_shape(shape)[:-1] + (1,)):
+                return _row_stat(
+                    sh.flatten_momentum_spec(pspec, shape, fl), leaf.ndim
+                )
             return P(*(None,) * leaf.ndim)
         return sh.momentum_spec(pspec, shape, sizes, zero1=zero1,
                                 zero1_axis=axes, label=label)

@@ -85,7 +85,8 @@ def set_launch_hook(
 
 
 def register_backend(name: str, fn: Callable) -> None:
-    """Register ``fn(g, steps, coeffs, eps, strategy) -> array`` under ``name``."""
+    """Register ``fn(g, steps, coeffs, eps, strategy, normalize) -> array``
+    under ``name``."""
     _REGISTRY[name] = fn
 
 
@@ -207,9 +208,14 @@ def shared_launch_groups(keys) -> dict:
 
 def orthogonalize(
     g, *, steps, coeffs, eps, backend: Optional[str] = None,
-    strategy: Optional[str] = None,
+    strategy: Optional[str] = None, normalize: bool = True,
 ):
-    """Dispatch ``Orth(g)`` to the selected backend/strategy."""
+    """Dispatch ``Orth(g)`` to the selected backend/strategy.
+
+    ``normalize=False`` skips the kernels' entry Frobenius normalization
+    (the caller pre-scaled the input into the NS convergence basin — the
+    Turbo-Muon preconditioner path).
+    """
     name = backend if backend is not None else get_backend()
     if name not in _REGISTRY:
         raise ValueError(
@@ -221,16 +227,17 @@ def orthogonalize(
         )
     if _launch_hook is not None:
         _launch_hook(name, strategy, tuple(g.shape))
-    return _REGISTRY[name](g, steps, coeffs, eps, strategy)
+    return _REGISTRY[name](g, steps, coeffs, eps, strategy, normalize)
 
 
-def _jnp_backend(g, steps, coeffs, eps, strategy=None):
+def _jnp_backend(g, steps, coeffs, eps, strategy=None, normalize=True):
     from repro.core.newton_schulz import orthogonalize_jnp
 
-    return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps)
+    return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps,
+                             normalize=normalize)
 
 
-def _pallas_backend(g, steps, coeffs, eps, strategy=None):
+def _pallas_backend(g, steps, coeffs, eps, strategy=None, normalize=True):
     from repro.core.newton_schulz import orthogonalize_jnp
     from repro.kernels.newton_schulz import fused, ops
 
@@ -238,21 +245,24 @@ def _pallas_backend(g, steps, coeffs, eps, strategy=None):
         strategy = plan_strategy(g.shape, "pallas")
     interpret = jax.default_backend() != "tpu"
     if strategy == "jnp":
-        return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps)
+        return orthogonalize_jnp(g, steps=steps, coeffs=coeffs, eps=eps,
+                                 normalize=normalize)
     if strategy in ("fused_chain", "fused_iter"):
         return fused.orthogonalize(
             g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret,
-            chain=strategy == "fused_chain",
+            chain=strategy == "fused_chain", normalize=normalize,
         )
     if strategy == "tiled":
         if g.ndim == 2:
             return ops.orthogonalize(
-                g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret
+                g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret,
+                normalize=normalize,
             )
         # Oversized stacks stream each matrix through the tiled 3-launch
         # path (ROADMAP item: previously they silently fell back to jnp).
         return ops.orthogonalize_batched(
-            g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret
+            g, steps=steps, coeffs=coeffs, eps=eps, interpret=interpret,
+            normalize=normalize,
         )
     raise ValueError(f"unknown NS strategy {strategy!r}")
 

@@ -222,7 +222,9 @@ def ns_iteration_batched(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("steps", "coeffs", "eps", "tm", "interpret", "chain")
+    jax.jit,
+    static_argnames=("steps", "coeffs", "eps", "tm", "interpret", "chain",
+                     "normalize"),
 )
 def orthogonalize(
     g: jax.Array,
@@ -233,12 +235,15 @@ def orthogonalize(
     tm: int = DEFAULT_GRAM_TILE,
     interpret: bool = False,
     chain: bool = False,
+    normalize: bool = True,
 ) -> jax.Array:
     """Fused-kernel NS orthogonalization over the trailing two dims.
 
     Accepts arbitrary leading (stack) dims; matches
     ``core.newton_schulz.orthogonalize`` numerics — iterate on the smaller
     side, fro-normalize, fp32 internally, cast back at the end.
+    ``normalize=False`` skips the entry normalization for pre-scaled inputs
+    (the Turbo-Muon preconditioner path).
 
     ``chain=True`` runs all ``steps`` iterations inside ONE Pallas launch
     (X stays in VMEM for the whole chain); ``chain=False`` launches once
@@ -254,8 +259,9 @@ def orthogonalize(
     if transpose:
         x = jnp.swapaxes(x, -1, -2)
         m, n = n, m
-    norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
-    x = x / (norm + eps)
+    if normalize:
+        norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
+        x = x / (norm + eps)
     # Pad once for the whole chain (zero-pad is NS-exact, see _pad_stack) so
     # each iteration is exactly one launch with no pad/slice copies between.
     a, b, c = (float(v) for v in coeffs)

@@ -30,7 +30,9 @@ def ns_iteration(x: jax.Array, coeffs=PAPER_COEFFS, *, interpret: bool = False) 
     return fma_matmul(poly, x, x, alpha=a, beta=1.0, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "coeffs", "interpret", "eps"))
+@functools.partial(
+    jax.jit, static_argnames=("steps", "coeffs", "interpret", "eps", "normalize")
+)
 def orthogonalize(
     g: jax.Array,
     steps: int = 5,
@@ -38,12 +40,14 @@ def orthogonalize(
     *,
     eps: float = 1e-7,
     interpret: bool = False,
+    normalize: bool = True,
 ) -> jax.Array:
     """Pallas-kernel Newton-Schulz orthogonalization of a 2D matrix.
 
     Matches ``repro.core.newton_schulz.orthogonalize`` (the pure-jnp version
     used by the optimizer) and ``ref.newton_schulz_ref``; iterates on the
-    smaller side, fp32 internally.
+    smaller side, fp32 internally. ``normalize=False`` skips the entry
+    normalization for pre-scaled inputs (Turbo-Muon preconditioner path).
     """
     if g.ndim != 2:
         raise ValueError(
@@ -55,7 +59,8 @@ def orthogonalize(
     transpose = x.shape[0] > x.shape[1]
     if transpose:
         x = x.T
-    x = x / (jnp.linalg.norm(x) + eps)
+    if normalize:
+        x = x / (jnp.linalg.norm(x) + eps)
     for _ in range(steps):
         x = ns_iteration(x, coeffs, interpret=interpret)
     if transpose:
@@ -63,7 +68,9 @@ def orthogonalize(
     return x.astype(orig_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "coeffs", "interpret", "eps"))
+@functools.partial(
+    jax.jit, static_argnames=("steps", "coeffs", "interpret", "eps", "normalize")
+)
 def orthogonalize_batched(
     g: jax.Array,
     steps: int = 5,
@@ -71,6 +78,7 @@ def orthogonalize_batched(
     *,
     eps: float = 1e-7,
     interpret: bool = False,
+    normalize: bool = True,
 ) -> jax.Array:
     """Tiled-path NS for stacks whose fused working set exceeds VMEM.
 
@@ -88,7 +96,7 @@ def orthogonalize_batched(
     flat = g.reshape(-1, m, n)
     outs = [
         orthogonalize(flat[i], steps=steps, coeffs=coeffs, eps=eps,
-                      interpret=interpret)
+                      interpret=interpret, normalize=normalize)
         for i in range(flat.shape[0])
     ]
     return jnp.stack(outs).reshape(g.shape)

@@ -134,14 +134,23 @@ def abstract_cache(cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16
 
 
 def make_optimizer(cfg: ModelConfig, mesh, a_params, pspecs, period=5,
-                   layer_shard=None, comm=None, full_schedule=None):
+                   layer_shard=None, comm=None, full_schedule=None,
+                   opt_variant=None):
+    from repro.core import variants as variants_lib
+
     labels = label_tree(a_params)
     bspecs = sh.block_specs_for(a_params, pspecs, mesh)
-    # Only pass block specs for muon-managed leaves (BlockSpec pytree must
-    # match the masked tree; mask non-muon leaves to BlockSpec(1,1)).
-    opt_muon = muon(1e-3, 1e-3, period=period, block_specs=jax.tree.map(
-        lambda l, b: b if l == "muon" else None, labels, bspecs),
-        layer_shard=layer_shard, comm=comm, full_schedule=full_schedule)
+    vspec = variants_lib.get(opt_variant)
+    if vspec.low_rank:
+        opt_muon = variants_lib.build_variant(
+            "dion", 1e-3, comm=comm, full_schedule=full_schedule)
+    else:
+        # Only pass block specs for muon-managed leaves (BlockSpec pytree
+        # must match the masked tree; mask non-muon leaves to BlockSpec(1,1)).
+        opt_muon = muon(1e-3, 1e-3, period=period, block_specs=jax.tree.map(
+            lambda l, b: b if l == "muon" else None, labels, bspecs),
+            layer_shard=layer_shard, comm=comm, full_schedule=full_schedule,
+            variant=vspec)
     return combine({"muon": opt_muon, "adamw": adamw(3e-4)}, labels)
 
 
@@ -168,6 +177,9 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
       full_schedule: str    — engine full-step schedule ('pipelined'
                               default / 'barrier' A/B / 'staggered'
                               per-residue mixed phases)
+      optimizer_variant: str — optimizer-variant program
+                              (core/variants.py: muon / turbo_muon /
+                              normuon / dion)
     """
     v = variant or {}
     if v.get("flash_block_k"):
@@ -187,7 +199,8 @@ def _lower(cfg, shape, mesh, ctx, phase: str, period: int, variant: dict | None 
         )
         optimizer = make_optimizer(cfg, mesh, a_params, pspecs, period=period,
                                    layer_shard=dist, comm=comm,
-                                   full_schedule=v.get("full_schedule"))
+                                   full_schedule=v.get("full_schedule"),
+                                   opt_variant=v.get("optimizer_variant"))
         a_opt = jax.eval_shape(optimizer.init, a_params)
         a_opt = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a_opt)
         # momentum trees: reuse param shardings by structure-matching paths
@@ -458,6 +471,11 @@ def main():
     ap.add_argument("--zero1-flatten", action="store_true",
                     help="with --zero1: flatten-and-shard fallback for "
                          "indivisible layer counts")
+    ap.add_argument("--optimizer-variant", default=None,
+                    help="optimizer-variant program to lower "
+                         "(core/variants.py: muon / turbo_muon / normuon / "
+                         "dion); non-default variants get their own result "
+                         "artifact")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true", help="re-run existing results")
     ap.add_argument("--log-file", default=None,
@@ -481,6 +499,11 @@ def main():
         variant["zero1"] = True
     if args.zero1_flatten:
         variant["zero1_flatten"] = True
+    if args.optimizer_variant:
+        from repro.core import variants as variants_lib
+
+        variants_lib.get(args.optimizer_variant)  # validate the name early
+        variant["optimizer_variant"] = args.optimizer_variant
     variant = variant or None
 
     # Default train-shape phases of the selected schedule: the synchronous

@@ -57,6 +57,10 @@ def main():
                          "'barrier' is the gather-all/NS-all/slice-all A/B; "
                          "'staggered' measures the per-residue mixed phases "
                          "— pass --phase stagger:<r>)")
+    ap.add_argument("--optimizer-variant", default=None,
+                    help="optimizer-variant program to measure "
+                         "(core/variants.py: muon / turbo_muon / normuon / "
+                         "dion)")
     ap.add_argument("--bf16-grads", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--log-file", default=None,
@@ -101,6 +105,11 @@ def main():
         variant["zero1_flatten"] = True
     if args.bf16_grads:
         variant["bf16_grads"] = True
+    if args.optimizer_variant:
+        from repro.core import variants as variants_lib
+
+        variants_lib.get(args.optimizer_variant)  # validate the name early
+        variant["optimizer_variant"] = args.optimizer_variant
 
     rec = lower_combo(
         args.arch, args.shape, phase=args.phase, period=args.period,

@@ -58,6 +58,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import NSEngineConfig
 from repro.core import adamw, block_muon, combine, dion, label_tree, muon, muon_full
+from repro.core import variants as variants_lib
 from repro.core.muon import StaggerSchedule
 from repro.core.schedule import cosine, wsd
 from repro.data.pipeline import SyntheticLM
@@ -83,28 +84,35 @@ from repro.training.train_step import init_train_state, make_train_step_fns
 
 def build_optimizer(name, params, *, lr, adam_lr, period, schedule_fn=None,
                     block_specs=None, rank=64, weight_decay=0.1, engine=None,
-                    comm=None):
+                    comm=None, variant=None):
     labels = label_tree(params)
     lr_s = schedule_fn(lr) if schedule_fn else lr
     adam_s = schedule_fn(adam_lr) if schedule_fn else adam_lr
     engine = engine if engine is not None else NSEngineConfig.from_env()
+    vspec = variants_lib.get(variant if variant is not None else engine.variant)
     ns_kw = dict(bucketing=engine.bucketing, ns_backend=engine.backend,
                  ns_strategy=engine.strategy, comm=comm,
                  full_schedule=engine.full_schedule)
     if name == "adamw":
         return combine({"adamw": adamw(adam_s, weight_decay=weight_decay)},
                        jax.tree.map(lambda _: "adamw", labels)), None
-    if name == "dion":
-        matrix_opt = dion(lr_s, rank=rank, weight_decay=weight_decay)
+    if name == "dion" or vspec.low_rank:
+        # Legacy ``--optimizer dion`` and ``--optimizer-variant dion`` build
+        # the same revived low-rank program (core/dion.py through
+        # compile_program; comm wraps in the factor engine view).
+        matrix_opt = variants_lib.build_variant(
+            "dion", lr_s, rank=rank,
+            weight_decay=weight_decay, period=period, **ns_kw)
+        name = "dion"
     elif name == "muon":
         matrix_opt = muon_full(lr_s, weight_decay=weight_decay,
-                               block_specs=block_specs, **ns_kw)
+                               block_specs=block_specs, variant=vspec, **ns_kw)
     elif name == "blockmuon":
         matrix_opt = block_muon(lr_s, weight_decay=weight_decay,
-                                block_specs=block_specs, **ns_kw)
+                                block_specs=block_specs, variant=vspec, **ns_kw)
     elif name == "muonbp":
         matrix_opt = muon(lr_s, lr_s, period=period, weight_decay=weight_decay,
-                          block_specs=block_specs, **ns_kw)
+                          block_specs=block_specs, variant=vspec, **ns_kw)
     else:
         raise ValueError(name)
     period_eff = {"muon": 1, "blockmuon": None, "dion": 1, "muonbp": period}[name]
@@ -118,6 +126,16 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--optimizer", default="muonbp",
                     choices=["muonbp", "muon", "blockmuon", "adamw", "dion"])
+    ap.add_argument("--optimizer-variant", default=None,
+                    choices=list(variants_lib.names()),
+                    help="optimizer-variant program (core/variants.py): "
+                         "'muon' baseline, 'turbo_muon' spectral "
+                         "preconditioning + reduced NS K, 'normuon' "
+                         "neuron-wise second-moment epilogue, 'dion' "
+                         "low-rank (default: REPRO_OPTIMIZER_VARIANT or "
+                         "muon); composes with --optimizer muonbp/muon/"
+                         "blockmuon — 'dion' overrides the matrix "
+                         "optimizer entirely")
     ap.add_argument("--period", type=int, default=5)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -223,15 +241,25 @@ def main():
                     help="output dir for the --profile-steps trace")
     args = ap.parse_args()
 
+    variant_name = (args.optimizer_variant
+                    if args.optimizer_variant is not None
+                    else NSEngineConfig.from_env().variant)
     if args.full_schedule == "staggered":
         # Staggering is an engine-mode schedule over the per-leaf gathers of
         # a periodic optimizer: GSPMD has no explicit gathers to stagger and
-        # the non-periodic optimizers have no full step to spread.
+        # the non-periodic optimizers have no full step to spread. The
+        # muon-family variants (turbo_muon/normuon) keep the periodic
+        # structure and stagger fine; the dion variant has no per-leaf
+        # full-step gathers at all.
         if args.comm_engine != "shard_map":
             ap.error("--full-schedule staggered requires --comm-engine shard_map")
         if args.optimizer != "muonbp":
             ap.error("--full-schedule staggered requires --optimizer muonbp "
                      f"(got {args.optimizer!r})")
+        if variant_name == "dion" or args.optimizer == "dion":
+            ap.error("--full-schedule staggered is incompatible with the "
+                     "dion variant (a low-rank update has no per-leaf "
+                     "full-step gathers to stagger)")
         if args.period < 2:
             ap.error("--full-schedule staggered requires --period >= 2 "
                      f"(got {args.period})")
@@ -286,6 +314,8 @@ def main():
         engine = dataclasses.replace(engine, bucketing=False)
     if args.full_schedule:
         engine = dataclasses.replace(engine, full_schedule=args.full_schedule)
+    if args.optimizer_variant:
+        engine = dataclasses.replace(engine, variant=args.optimizer_variant)
     from repro.distributed import make_engine
     from repro.distributed import zero1 as zero1_lib
 
@@ -297,7 +327,7 @@ def main():
     optimizer, period = build_optimizer(
         args.optimizer, params, lr=args.lr, adam_lr=args.adam_lr,
         period=args.period, schedule_fn=sched, block_specs=bspecs,
-        engine=engine, comm=comm,
+        engine=engine, comm=comm, variant=variant_name,
     )
 
     # Step-phase schedule. Synchronous: every muon bucket goes full on the
@@ -424,6 +454,7 @@ def main():
     run_meta = {
         "arch": cfg.name,
         "optimizer": args.optimizer,
+        "variant": variant_name,
         "period": period,
         "mesh": {k: int(v) for k, v in zip(mesh.axis_names, mesh.devices.shape)},
         "zero1": bool(args.zero1),
@@ -487,7 +518,8 @@ def main():
 
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M optimizer={args.optimizer} "
-          f"period={period} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+          f"variant={variant_name} period={period} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     escalator = (
         resilience.Escalator(resilience.EscalationPolicy(

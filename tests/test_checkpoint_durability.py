@@ -179,6 +179,78 @@ def test_latest_valid_skips_wrong_run(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Variant optimizer state round-trips
+# ---------------------------------------------------------------------------
+
+def test_normuon_state_roundtrips_through_snapshot(tmp_path):
+    """NorMuon's extra leaves (row second moments + int32 refresh counters)
+    must survive save -> verify -> restore bitwise, through the same
+    template path the launcher uses; baseline state (second_moment=None)
+    keeps its seed leaf set so old snapshots stay loadable."""
+    import jax
+    from repro.core import muon
+
+    params = {"w": np.float32(np.random.default_rng(0).normal(size=(12, 16))),
+              "s": np.float32(np.random.default_rng(1).normal(size=(2, 8, 8)))}
+    opt = muon(0.02, variant="normuon")
+    grads = jax.tree.map(lambda p: 0.1 * p, params)
+    _, state = opt.update(grads, opt.init(params), params, "full")
+    assert all(int(c) == 1 for c in jax.tree.leaves(state.vcount))
+
+    root = str(tmp_path / "snaps")
+    checkpoint.save_snapshot(root, params, state, step=7)
+    path, meta = checkpoint.latest_valid(root)
+    assert meta["step"] == 7
+    template = jax.eval_shape(opt.init, params)
+    _, restored, step = checkpoint.restore(path, params, template)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+    # a baseline (muon) state snapshot has no variant leaves at all
+    base = muon(0.02)
+    b_state = base.init(params)
+    assert b_state.second_moment is None and b_state.vcount is None
+    checkpoint.save_snapshot(root, params, b_state, step=8)
+    p2, _ = checkpoint.latest_valid(root)
+    _, r2, _ = checkpoint.restore(p2, params, jax.eval_shape(base.init, params))
+    assert r2.second_moment is None and r2.vcount is None
+
+
+@pytest.mark.slow
+def test_train_resume_roundtrips_normuon_state(tmp_path):
+    """--optimizer-variant normuon end-to-end: checkpoint at step cadence,
+    relaunch with --resume, and the run must restore (resume event) and
+    finish — i.e. the second-moment state restores through the launcher's
+    template path, and run_meta records the variant on both runs."""
+    ckpt = str(tmp_path / "ckpt")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", "granite-8b",
+            "--reduced", "--steps", "4", "--batch", "2", "--seq", "32",
+            "--period", "2", "--log-every", "1",
+            "--optimizer-variant", "normuon",
+            "--checkpoint-every", "2", "--checkpoint-dir", ckpt,
+            "--keep-checkpoints", "2"]
+    first = subprocess.run(base, capture_output=True, text=True, env=env,
+                           timeout=900)
+    assert first.returncode == 0, first.stderr[-4000:]
+    meta = checkpoint.load_meta(checkpoint.latest_valid(ckpt)[0])
+    assert meta["run"]["variant"] == "normuon"
+    second = subprocess.run(
+        base[:base.index("--steps") + 1] + ["6"] + base[base.index("--steps") + 2:]
+        + ["--resume"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert second.returncode == 0, second.stderr[-4000:]
+    recs = [json.loads(l) for l in second.stdout.splitlines()
+            if l.startswith("{")]
+    resume = next(r for r in recs if r.get("event") == "resume")
+    assert resume["step"] > 0 and resume["snapshot"]
+    steps = [r["step"] for r in recs if "loss" in r]
+    assert steps and steps[-1] == 5 and steps == list(range(steps[0], 6))
+
+
+# ---------------------------------------------------------------------------
 # SIGKILL inside save (subprocess) — the atomicity claim under real kills
 # ---------------------------------------------------------------------------
 

@@ -26,6 +26,7 @@ import pytest
 
 from conftest import make_batch, tiny_cfg
 from repro.core import adamw, combine, label_tree, muon
+from repro.core import variants as variants_lib
 from repro.models.model import init_params
 from repro.models.transformer import ShardCtx
 from repro.training import resilience
@@ -182,10 +183,14 @@ def test_fault_plan_kill_fires_once_at_or_after_step():
 # Integration (single device): bitwise parity + fault handling
 # ---------------------------------------------------------------------------
 
-def _setup(key, guard=None, fault=None):
+def _setup(key, guard=None, fault=None, variant=None):
     cfg = tiny_cfg("granite-8b")
     params = init_params(key, cfg)
-    opt = combine({"muon": muon(0.02, 0.02, period=3), "adamw": adamw(0.01)},
+    if variant is not None and variants_lib.get(variant).low_rank:
+        matrix_opt = variants_lib.build_variant(variant, 0.02, rank=8)
+    else:
+        matrix_opt = muon(0.02, 0.02, period=3, variant=variant)
+    opt = combine({"muon": matrix_opt, "adamw": adamw(0.01)},
                   label_tree(params))
     fns = make_train_step_fns(cfg, opt, ShardCtx(), donate=False, guard=guard,
                               fault=fault)
@@ -213,6 +218,38 @@ def test_guarded_step_bitwise_identical_when_healthy(key):
     assert int(m["skipped"]) == 0 and int(m["healthy"]) == 1
     assert float(m["lr_scale"]) == 1.0
     assert int(state_g.guard.ema_count) == 6
+
+
+@pytest.mark.parametrize("variant", ["turbo_muon", "normuon", "dion"])
+def test_guarded_step_bitwise_identical_per_variant(key, variant):
+    """The guard's lax.cond identity branch must stay bitwise-transparent
+    for every optimizer variant — including NorMuon's extra second-moment
+    state and Dion's basis, which ride through the same skip machinery."""
+    cfg, state_u, fns_u = _setup(key, variant=variant)
+    _, state_g, fns_g = _setup(key, guard=GuardConfig(), variant=variant)
+    batch = make_batch(cfg)
+    for t in range(4):
+        phase = "full" if t % 3 == 0 else "block"
+        state_u, _ = fns_u[phase](state_u, batch)
+        state_g, m = fns_g[phase](state_g, batch)
+    assert _leaves_equal(state_u.params, state_g.params)
+    assert _leaves_equal(state_u.opt_state, state_g.opt_state)
+    assert int(m["skipped"]) == 0 and int(m["healthy"]) == 1
+
+
+@pytest.mark.parametrize("variant", ["normuon", "dion"])
+def test_guard_skip_leaves_variant_state_untouched(key, variant):
+    """A skipped (NaN-grad) step must not advance variant-specific state:
+    NorMuon's second moment / vcount and Dion's basis stay bitwise-put."""
+    cfg, state, fns = _setup(key, guard=GuardConfig(), variant=variant)
+    _, _, fault_fns = _setup(key, guard=GuardConfig(),
+                             fault=Fault("nan_grads", 0), variant=variant)
+    batch = make_batch(cfg)
+    state, _ = fns["full"](state, batch)  # populate the variant state
+    before = state.opt_state
+    state, m = fault_fns["block"](state, batch)
+    assert int(m["skipped"]) == 1
+    assert _leaves_equal(before, state.opt_state)
 
 
 @pytest.mark.parametrize("kind", ["nan_grads", "inf_grads"])

@@ -227,8 +227,10 @@ def test_kernel_plans_follow_vmem_fit():
     huge = LeafSpec(key=("h",), shape=(2, 16384, 16384), dtype="float32", block=None)
     prog = compile_program((small, huge), backend="pallas")
     by_key = {op.leaves[0].index: op for op in prog.phase("full").ops}
-    assert by_key[0].kernel == program_lib.KernelPlan("pallas", "fused_chain")
-    assert by_key[1].kernel == program_lib.KernelPlan("pallas", "tiled")
+    assert by_key[0].kernel == program_lib.KernelPlan(
+        "pallas", "fused_chain", ns_steps=5)
+    assert by_key[1].kernel == program_lib.KernelPlan(
+        "pallas", "tiled", ns_steps=5)
     # jnp backend never plans kernels
     prog_jnp = compile_program((small, huge), backend="jnp")
     assert all(op.kernel.strategy == "jnp" for op in prog_jnp.phase("full").ops)
